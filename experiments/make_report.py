@@ -1,0 +1,84 @@
+"""Generate the §Roofline markdown table + §Perf before/after from artifacts.
+
+  python experiments/make_report.py >> EXPERIMENTS.md   (or paste manually)
+"""
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load(tag):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(ART, f"*__{tag}.json"))):
+        a = json.load(open(p))
+        out[(a["arch"], a["shape"], a["mesh"])] = a
+    return out
+
+
+def fmt_s(v):
+    return f"{v:.4f}" if v >= 1e-4 else f"{v:.2e}"
+
+
+def main():
+    base = load("base")
+    print("### §Roofline baseline table (single-pod, 256 chips)\n")
+    print("| arch | shape | compute_s | memory_s | collective_s | bottleneck | useful_flops | roofline_frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for (arch, shape, mesh), a in sorted(base.items()):
+        if mesh != "single":
+            continue
+        if "error" in a:
+            print(f"| {arch} | {shape} | - | - | - | LOWER-FAIL | - | - |")
+            continue
+        r = a["roofline"]
+        print(
+            f"| {arch} | {shape} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+            f"{fmt_s(r['collective_s'])} | {r['bottleneck']} | "
+            f"{r['useful_flops_frac']:.3f} | {r['roofline_frac']:.3f} |"
+        )
+    print("\n### Multi-pod compile proof (512 chips)\n")
+    n_ok = n_fail = 0
+    fails = []
+    for (arch, shape, mesh), a in sorted(base.items()):
+        if mesh != "multi":
+            continue
+        if "error" in a:
+            n_fail += 1
+            fails.append((arch, shape, a["error"][:100]))
+        else:
+            n_ok += 1
+    print(f"{n_ok} cells compiled OK, {n_fail} failed")
+    for f in fails:
+        print(f"  FAIL {f[0]} x {f[1]}: {f[2]}")
+
+    print("\n### §Perf hillclimb before/after\n")
+    print("| cell | tag | compute_s | memory_s | collective_s | step_s | roofline_frac |")
+    print("|---|---|---|---|---|---|---|")
+    for tag in ("base", "sp", "sp_dots", "bf16psum", "nofsdp", "xkv", "pin"):
+        arts = load(tag)
+        for (arch, shape, mesh), a in sorted(arts.items()):
+            if mesh != "single" or "roofline" not in a:
+                continue
+            if tag == "base" and not any(
+                (arch, shape) == c
+                for c in [
+                    ("qwen2-1.5b", "train_4k"),
+                    ("qwen3-moe-235b-a22b", "train_4k"),
+                    ("granite-20b", "decode_32k"),
+                    ("whisper-medium", "train_4k"),
+                    ("mamba2-780m", "train_4k"),
+                ]
+            ):
+                continue
+            r = a["roofline"]
+            print(
+                f"| {arch}/{shape} | {tag} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+                f"{fmt_s(r['collective_s'])} | {fmt_s(r['step_time_s'])} | {r['roofline_frac']:.3f} |"
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+from repro.accelerators.base import Platform
+from repro.accelerators.ultratrail import UltraTrailSim
+from repro.accelerators.vta import VTASim
+from repro.accelerators.tpu_v5e import TPUv5eSim, V5E
+from repro.accelerators.xla_cpu import XLACPUPlatform
+
+__all__ = [
+    "Platform",
+    "UltraTrailSim",
+    "VTASim",
+    "TPUv5eSim",
+    "V5E",
+    "XLACPUPlatform",
+]

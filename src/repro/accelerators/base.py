@@ -1,0 +1,81 @@
+"""Platform protocol: the "hardware under test" abstraction.
+
+The paper benchmarks four platforms (UltraTrail RTL sim, VTA Verilator sim, an
+NDA vendor timing simulator, and a Jetson AGX GPU).  Here a *Platform* is
+anything that can measure the execution time of a parameterised layer, exposes
+its parameter space, and declares how much architectural knowledge is public
+(white / gray / black box).  Simulated platforms are analytical timing models
+(the paper itself uses vendor timing simulators); the XLA-CPU platform performs
+real wall-clock measurements.
+"""
+
+from __future__ import annotations
+
+import abc
+import time
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core.prs import Config, ParamSpace
+
+
+class Platform(abc.ABC):
+    """A benchmarkable accelerator platform."""
+
+    name: str = "platform"
+    #: "white" | "gray" | "black" -- drives how PRs are determined (Fig. 3).
+    knowledge: str = "black"
+
+    # ---- capability description -------------------------------------------------
+    @abc.abstractmethod
+    def layer_types(self) -> tuple[str, ...]:
+        ...
+
+    @abc.abstractmethod
+    def param_space(self, layer_type: str) -> ParamSpace:
+        ...
+
+    @abc.abstractmethod
+    def defaults(self, layer_type: str) -> Config:
+        """Mid-range default config used as the sweep anchor point."""
+
+    def known_step_widths(self, layer_type: str) -> dict[str, int] | None:
+        """White-box: the full step-width map derivable from documentation.
+
+        Gray-box platforms return a *partial* map (only the documented dims);
+        black-box platforms return None.
+        """
+        return None
+
+    # ---- measurement ---------------------------------------------------------------
+    @abc.abstractmethod
+    def measure(self, layer_type: str, cfg: Config) -> float:
+        """Execution time in seconds of a single layer configuration."""
+
+    def measure_many(self, layer_type: str, configs: Sequence[Config]) -> np.ndarray:
+        return np.array([self.measure(layer_type, c) for c in configs], dtype=np.float64)
+
+    def measure_block(self, layers: Sequence[tuple[str, Config]]) -> float:
+        """Execution time of a multi-layer building block run as one unit.
+
+        Default: no fusion/overlap -> sum of single-layer times.  Platforms
+        with overlapping functional units / double buffering override this.
+        """
+        return float(sum(self.measure(lt, cfg) for lt, cfg in layers))
+
+    # ---- bookkeeping ---------------------------------------------------------------
+    def timed_measure_many(
+        self, layer_type: str, configs: Sequence[Config]
+    ) -> tuple[np.ndarray, float]:
+        """(times, mean wall-clock seconds per benchmark point) -- Table 1 column."""
+        t0 = time.perf_counter()
+        y = self.measure_many(layer_type, configs)
+        wall = time.perf_counter() - t0
+        return y, wall / max(1, len(configs))
+
+
+def sweep_values(lo: int, hi: int, max_points: int = 512) -> np.ndarray:
+    """Integer sweep grid over [lo, hi] with stride 1 capped at ``max_points``."""
+    stride = max(1, (hi - lo) // max_points)
+    return np.arange(lo, hi + 1, stride)

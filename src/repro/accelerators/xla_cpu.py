@@ -1,0 +1,66 @@
+"""XLA-CPU platform: *real* wall-clock measurements on this machine.
+
+This is the black-box platform analog of the paper's Jetson AGX Xavier: a real,
+noisy computing device where nothing about tiling is documented to the
+methodology.  Layers are jitted with XLA and timed; the paper's median-of-k
+protocol (it used 500 runs on the Jetson) mitigates warm-up noise.
+
+Measurement is expensive -- keep parameter spaces small and use this platform
+for the black-box evaluation path only.
+"""
+
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.accelerators.base import Platform
+from repro.core.prs import Config, ParamSpace
+
+
+@partial(jax.jit, static_argnums=(0, 1, 2))
+def _dense(m: int, k: int, n: int, a, b):
+    del m, k, n
+    return a @ b
+
+
+class XLACPUPlatform(Platform):
+    name = "xla_cpu"
+    knowledge = "black"
+
+    def __init__(self, repeats: int = 5, dtype=jnp.float32) -> None:
+        self.repeats = repeats
+        self.dtype = dtype
+        self._cache: dict[tuple, float] = {}
+
+    def layer_types(self) -> tuple[str, ...]:
+        return ("dense",)
+
+    def param_space(self, layer_type: str) -> ParamSpace:
+        assert layer_type == "dense"
+        return ParamSpace(ranges={"tokens": (16, 256), "d_in": (32, 768), "d_out": (32, 768)})
+
+    def defaults(self, layer_type: str) -> Config:
+        return {"tokens": 64, "d_in": 256, "d_out": 256}
+
+    def measure(self, layer_type: str, cfg: Config) -> float:
+        assert layer_type == "dense"
+        key = (cfg["tokens"], cfg["d_in"], cfg["d_out"])
+        if key in self._cache:
+            return self._cache[key]
+        m, k, n = key
+        a = jnp.ones((m, k), self.dtype)
+        b = jnp.ones((k, n), self.dtype)
+        _dense(m, k, n, a, b).block_until_ready()  # compile + warm up
+        samples = []
+        for _ in range(self.repeats):
+            t0 = time.perf_counter()
+            _dense(m, k, n, a, b).block_until_ready()
+            samples.append(time.perf_counter() - t0)
+        t = float(np.median(samples))
+        self._cache[key] = t
+        return t

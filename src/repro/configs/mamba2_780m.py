@@ -1,0 +1,18 @@
+"""mamba2-780m [ssm]: 48L d_model=1536 attention-free SSD, state=128
+(arXiv:2405.21060)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    n_layers=48,
+    d_model=1536,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab=50280,
+    head_dim=1,
+    ssm_state=128,
+    ssm_headdim=64,
+    ssm_expand=2,
+)

@@ -1,0 +1,9 @@
+"""Core of the reproduction: the Performance-Representative methodology.
+
+Pipeline (paper Fig. 1): parameter sweeps -> Algorithm 1 step widths ->
+PR set -> PR sampling + benchmarking -> Random-Forest estimator ->
+PR mapping at query time -> building-block / whole-network combination.
+
+Submodules: steps, prs, forest, sweeps, estimator, blocks, network, advisor.
+(Imported lazily by users to avoid import cycles with repro.accelerators.)
+"""

@@ -1,0 +1,77 @@
+"""PR-guided configuration advisor (the paper's NAS use-case, systems-level).
+
+The paper positions its estimator inside an optimization loop (hardware-aware
+NAS) where measuring every candidate is too expensive.  The framework analogue:
+choosing a distribution configuration -- (dp, tp) mesh factors, microbatch
+count -- normally requires compiling every candidate (minutes each on the
+dry-run).  The advisor instead *estimates* every candidate's step time from
+the PR-trained layer models in milliseconds and returns a ranking; only the
+winner needs a compile.
+
+``autotune`` returns candidates sorted by estimated step time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.blocks import NetworkEstimator
+from repro.core.network import decompose
+from repro.models.config import InputShape, ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    dp: int
+    tp: int
+    microbatches: int = 1
+
+    def __str__(self) -> str:
+        return f"dp={self.dp} tp={self.tp} micro={self.microbatches}"
+
+
+def default_candidates(chips: int = 256) -> list[Candidate]:
+    out = []
+    tp = 1
+    while tp <= chips:
+        if chips % tp == 0:
+            for micro in (1, 2, 4):
+                out.append(Candidate(dp=chips // tp, tp=tp, microbatches=micro))
+        tp *= 2
+    return out
+
+
+def estimate_candidate(
+    estimator: NetworkEstimator,
+    cfg: ModelConfig,
+    shape: InputShape,
+    cand: Candidate,
+) -> float:
+    """Estimated step time under a candidate distribution config."""
+    if shape.global_batch % (cand.dp * cand.microbatches) and shape.global_batch >= cand.dp:
+        return float("inf")
+    micro_shape = dataclasses.replace(
+        shape, global_batch=max(1, shape.global_batch // cand.microbatches)
+    )
+    blocks = decompose(cfg, micro_shape, cand.dp, cand.tp)
+    return estimator.predict_network(blocks) * cand.microbatches
+
+
+def autotune(
+    estimator: NetworkEstimator,
+    cfg: ModelConfig,
+    shape: InputShape,
+    candidates: Sequence[Candidate] | None = None,
+    chips: int = 256,
+) -> list[tuple[Candidate, float]]:
+    candidates = list(candidates) if candidates is not None else default_candidates(chips)
+    valid = []
+    for c in candidates:
+        # feasibility: dp cannot exceed global batch; tp must divide d_ff-ish dims
+        if c.dp > max(1, shape.global_batch):
+            continue
+        if cfg.d_ff and cfg.d_ff % c.tp not in (0,) and cfg.moe_experts == 0:
+            continue
+        valid.append((c, estimate_candidate(estimator, cfg, shape, c)))
+    return sorted(valid, key=lambda x: x[1])

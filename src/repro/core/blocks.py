@@ -1,0 +1,141 @@
+"""Multi-layer building blocks and whole-network combination (Eq. 9-12).
+
+A *building block* is a short sequence of layers that the platform executes as
+one fused/overlapped unit (the paper's examples: depthwise-separable conv
+blocks, ResNet blocks, pool+FC).  For the LM-transformer domain the blocks are
+attention blocks, (gated-)MLP blocks, MoE blocks, SSD blocks, embedding and the
+LM head (see core/network.py).
+
+Combination rules:
+  * Eq. 9 ("max")  -- overlapping functional units: t_b = max_l t_l.
+  * Eq. 10/11      -- fused execution: t_b = sum_l t_l - f_beta(b) with the
+    fusing factor f_beta(b) = #ops(b) * w_beta + c_beta fitted per block type
+    from ~500 measured block configurations.
+  * Eq. 12         -- whole network: t_DNN = sum_b t_b.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.accelerators.base import Platform
+from repro.core.estimator import LayerEstimator
+from repro.core.forest import mape, rmspe
+from repro.core.prs import Config
+
+Layer = tuple[str, Config]
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    """One building-block instance."""
+
+    kind: str  # block type beta (e.g. "attn", "mlp", "moe", "ssd", "embed")
+    layers: tuple[Layer, ...]
+    #: collective bytes this block moves on the interconnect (sharded exec)
+    collective_bytes: float = 0.0
+    #: how many times this block repeats in the network (layer stacking)
+    repeat: int = 1
+
+
+def op_count(layer_type: str, cfg: Config) -> float:
+    """#ops(b) term of Eq. 11 -- *unpadded* multiply-accumulate count."""
+    if layer_type == "dense":
+        return 2.0 * cfg["tokens"] * cfg["d_in"] * cfg["d_out"]
+    if layer_type == "attention_prefill":
+        return 2.0 * cfg["B"] * cfg["H"] * cfg["S"] ** 2 * cfg["Dh"]
+    if layer_type == "attention_decode":
+        return 4.0 * cfg["B"] * cfg["H"] * cfg["S_kv"] * cfg["Dh"]
+    if layer_type == "moe_gemm":
+        return 6.0 * cfg["tokens"] * cfg["topk"] * cfg["d_model"] * cfg["d_ff"]
+    if layer_type == "ssd_scan":
+        return 2.0 * cfg["B"] * cfg["S"] * cfg["H"] * cfg["P"] * (2 * cfg["N"] + 128)
+    if layer_type == "embed":
+        return 2.0 * cfg["tokens"] * cfg["d_model"]
+    if layer_type == "conv1d":
+        w_out = (cfg["C_w"] + 2 * cfg.get("pad", 0) - cfg["F"]) // cfg.get("s", 1) + 1
+        return 2.0 * cfg["C"] * cfg["K"] * max(1, w_out) * cfg["F"]
+    if layer_type == "conv2d":
+        h_out = (cfg["C_h"] + 2 * cfg.get("pad", 1) - cfg["F"]) // cfg.get("s", 1) + 1
+        w_out = (cfg["C_w"] + 2 * cfg.get("pad", 1) - cfg["F"]) // cfg.get("s", 1) + 1
+        return 2.0 * cfg["C"] * cfg["K"] * max(1, h_out) * max(1, w_out) * cfg["F"] ** 2
+    if layer_type == "fully_connected":
+        return 2.0 * cfg["in"] * cfg["out"]
+    raise KeyError(layer_type)
+
+
+def block_ops(block: Block) -> float:
+    return float(sum(op_count(lt, cfg) for lt, cfg in block.layers))
+
+
+@dataclasses.dataclass
+class FusingModel:
+    """Linear fusing-factor model per block type (Eq. 11)."""
+
+    w: float = 0.0
+    c: float = 0.0
+    n_fit: int = 0
+
+    def __call__(self, block: Block) -> float:
+        return block_ops(block) * self.w + self.c
+
+
+def fit_fusing_model(
+    platform: Platform,
+    estimators: Mapping[str, LayerEstimator],
+    blocks: Sequence[Block],
+) -> FusingModel:
+    """Fit w_beta, c_beta from measured block configurations (Eq. 10/11)."""
+    f_targets = []
+    ops = []
+    for b in blocks:
+        t_meas = platform.measure_block(list(b.layers))
+        t_sum = sum(estimators[lt].predict_one(cfg) for lt, cfg in b.layers)
+        f_targets.append(t_sum - t_meas)
+        ops.append(block_ops(b))
+    A = np.stack([np.asarray(ops), np.ones(len(ops))], axis=1)
+    coef, *_ = np.linalg.lstsq(A, np.asarray(f_targets), rcond=None)
+    return FusingModel(w=float(coef[0]), c=float(coef[1]), n_fit=len(blocks))
+
+
+@dataclasses.dataclass
+class NetworkEstimator:
+    """Whole-network estimator: per-layer forests + per-block combination."""
+
+    estimators: Mapping[str, LayerEstimator]
+    fusing: Mapping[str, FusingModel] = dataclasses.field(default_factory=dict)
+    #: block kinds whose layers execute on overlapping FUs (Eq. 9 max rule)
+    overlap_kinds: frozenset[str] = frozenset()
+    #: documented per-launch overhead (gray-box knowledge): a fused block pays
+    #: it once, but the summed single-layer estimates include it per layer
+    launch_overhead_s: float = 0.0
+
+    def predict_block(self, block: Block) -> float:
+        times = [self.estimators[lt].predict_one(cfg) for lt, cfg in block.layers]
+        if block.kind in self.overlap_kinds:
+            t = max(times)  # Eq. 9
+        else:
+            t = sum(times) - self.launch_overhead_s * max(0, len(times) - 1)
+            if block.kind in self.fusing:
+                t = t - self.fusing[block.kind](block)  # Eq. 10
+        return max(t, self.launch_overhead_s if times else 0.0)
+
+    def predict_network(self, blocks: Sequence[Block]) -> float:
+        return float(sum(self.predict_block(b) * b.repeat for b in blocks))  # Eq. 12
+
+    def evaluate_networks(
+        self, platform: Platform, networks: Sequence[Sequence[Block]]
+    ) -> dict[str, float]:
+        y_true, y_pred = [], []
+        for net in networks:
+            t = 0.0
+            for b in net:
+                t += platform.measure_block(list(b.layers), collective_bytes=b.collective_bytes) * b.repeat \
+                    if hasattr(platform, "measure_block") else 0.0
+            y_true.append(t)
+            y_pred.append(self.predict_network(net))
+        y_true, y_pred = np.asarray(y_true), np.asarray(y_pred)
+        return {"mape": mape(y_true, y_pred), "rmspe": rmspe(y_true, y_pred)}

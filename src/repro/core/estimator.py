@@ -1,0 +1,136 @@
+"""Single-layer execution-time estimators (Sec. 3.3 of the paper).
+
+``build_estimator`` implements the full pipeline of Fig. 1 for one layer type:
+determine PRs (per knowledge tier), sample benchmark points (from the PR set,
+or randomly for the baseline comparison), measure them on the platform, and
+train a Random-Forest regressor.  At query time a configuration is first
+snapped to its PR (Eq. 7/8) and then predicted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.accelerators.base import Platform
+from repro.core import prs, sweeps
+from repro.core.features import derived_features
+from repro.core.forest import RandomForestRegressor, mape, rmspe
+
+
+@dataclasses.dataclass
+class LayerEstimator:
+    layer_type: str
+    params: tuple[str, ...]
+    widths: Mapping[str, int]
+    space: prs.ParamSpace
+    forest: RandomForestRegressor
+    #: bookkeeping for Table-1-style reporting
+    n_train: int = 0
+    n_sweep: int = 0
+    mean_measure_seconds: float = 0.0
+    sampling: str = "pr"
+    log_target: bool = True
+
+    def _features(self, configs: Sequence[prs.Config], snap: bool = True) -> np.ndarray:
+        if snap:
+            configs = [prs.map_to_pr(c, self.widths, self.space) for c in configs]
+        base = prs.configs_to_matrix(configs, self.params)
+        extra = np.array(
+            [list(derived_features(self.layer_type, c).values()) for c in configs],
+            dtype=np.float64,
+        )
+        if extra.size == 0:
+            return base
+        return np.concatenate([base, extra], axis=1)
+
+    def predict(self, configs: Sequence[prs.Config]) -> np.ndarray:
+        """Eq. 7/8: map to PR, then predict with the forest."""
+        y = self.forest.predict(self._features(configs, snap=True))
+        return np.exp(y) if self.log_target else y
+
+    def predict_one(self, cfg: prs.Config) -> float:
+        return float(self.predict([cfg])[0])
+
+    def evaluate(self, platform: Platform, test_configs: Sequence[prs.Config]) -> dict[str, float]:
+        y_true = platform.measure_many(self.layer_type, list(test_configs))
+        y_pred = self.predict(test_configs)
+        return {"mape": mape(y_true, y_pred), "rmspe": rmspe(y_true, y_pred)}
+
+
+def build_estimator(
+    platform: Platform,
+    layer_type: str,
+    n_samples: int,
+    sampling: str = "pr",
+    seed: int = 0,
+    threshold_linear: float = 0.02,
+    forest_kwargs: dict | None = None,
+    widths: Mapping[str, int] | None = None,
+) -> LayerEstimator:
+    """Train a single-layer estimator.
+
+    sampling:
+      * "pr"          -- sample from the PR set (the paper's method),
+      * "random"      -- sample uniformly from the complete parameter space
+                         (the paper's baseline comparison),
+      * "random_pr"   -- random sampling *of PR points* (ablation).
+    """
+    rng = np.random.default_rng(seed)
+    space = platform.param_space(layer_type)
+    n_sweep = 0
+    if widths is None:
+        if sampling == "random":
+            widths = {p: 1 for p in space.params}
+        else:
+            widths, _, n_sweep = sweeps.discover_step_widths(
+                platform, layer_type, threshold_linear
+            )
+    if sampling in ("pr", "random_pr"):
+        configs = prs.sample_pr_configs(space, widths, n_samples, rng)
+    elif sampling == "random":
+        configs = prs.sample_random_configs(space, n_samples, rng)
+    else:
+        raise ValueError(sampling)
+
+    y, mean_t = platform.timed_measure_many(layer_type, configs)
+    fk = dict(n_estimators=32, max_depth=30, min_samples_leaf=1, seed=seed)
+    fk.update(forest_kwargs or {})
+    forest = RandomForestRegressor(**fk)
+    est = LayerEstimator(
+        layer_type=layer_type,
+        params=space.params,
+        widths=widths,
+        space=space,
+        forest=forest,
+        n_train=n_samples,
+        n_sweep=n_sweep,
+        mean_measure_seconds=mean_t,
+        sampling=sampling,
+    )
+    X = est._features(configs, snap=(sampling != "random"))
+    target = np.log(np.asarray(y)) if est.log_target else np.asarray(y)
+    forest.fit(X, target)
+    return est
+
+
+def sampling_curve(
+    platform: Platform,
+    layer_type: str,
+    sizes: Sequence[int],
+    test_configs: Sequence[prs.Config],
+    sampling: str = "pr",
+    seed: int = 0,
+) -> list[dict[str, float]]:
+    """MAPE/RMSPE as a function of training-set size (Figs. 4-7)."""
+    out = []
+    for n in sizes:
+        t0 = time.perf_counter()
+        est = build_estimator(platform, layer_type, n, sampling=sampling, seed=seed)
+        metrics = est.evaluate(platform, test_configs)
+        metrics.update(n=n, sampling=sampling, train_wall_s=time.perf_counter() - t0)
+        out.append(metrics)
+    return out

@@ -1,0 +1,65 @@
+"""Derived (platform-independent) features for the statistical models.
+
+ANNETTE [11] -- the estimator family this paper builds on -- feeds its Random
+Forests derived layer descriptors (op counts, output sizes) alongside the raw
+layer parameters; raw parameters alone make trees interpolate products poorly.
+These formulas use only layer *semantics* (no hardware knowledge), so they are
+legitimate for black-box platforms too.  Features are computed on the
+PR-snapped configuration for PR-trained models (the snap is what encodes the
+hardware quantisation) and on the raw configuration for random-sampling
+baselines.
+"""
+
+from __future__ import annotations
+
+from repro.core.prs import Config
+
+
+def _conv_out(size: int, f: int, s: int, pad: int) -> int:
+    return max(1, (size + 2 * pad - f) // s + 1)
+
+
+def derived_features(layer_type: str, cfg: Config) -> dict[str, float]:
+    if layer_type == "conv1d":
+        w_out = _conv_out(cfg["C_w"], cfg["F"], cfg.get("s", 1), cfg.get("pad", 0))
+        macs = cfg["C"] * cfg["K"] * w_out * cfg["F"]
+        return {"w_out": w_out, "macs": macs, "weights": cfg["C"] * cfg["K"] * cfg["F"]}
+    if layer_type == "conv2d":
+        h_out = _conv_out(cfg["C_h"], cfg["F"], cfg.get("s", 1), cfg.get("pad", 1))
+        w_out = _conv_out(cfg["C_w"], cfg["F"], cfg.get("s", 1), cfg.get("pad", 1))
+        macs = cfg["C"] * cfg["K"] * h_out * w_out * cfg["F"] ** 2
+        return {"hw_out": h_out * w_out, "macs": macs, "weights": cfg["C"] * cfg["K"] * cfg["F"] ** 2}
+    if layer_type == "fully_connected":
+        return {"macs": cfg["in"] * cfg["out"], "weights": cfg["in"] * cfg["out"]}
+    if layer_type == "dense":
+        macs = cfg["tokens"] * cfg["d_in"] * cfg["d_out"]
+        byt = cfg["tokens"] * (cfg["d_in"] + cfg["d_out"]) + cfg["d_in"] * cfg["d_out"]
+        return {"macs": macs, "bytes": byt, "weights": cfg["d_in"] * cfg["d_out"]}
+    if layer_type == "attention_prefill":
+        kvh = max(1, cfg["H"] // cfg.get("kv_ratio", 4))
+        macs = cfg["B"] * cfg["H"] * cfg["S"] ** 2 * cfg["Dh"]
+        byt = cfg["B"] * cfg["S"] * cfg["Dh"] * (2 * cfg["H"] + 2 * kvh)
+        return {"macs": macs, "bytes": byt}
+    if layer_type == "attention_decode":
+        kvh = max(1, cfg["H"] // cfg.get("kv_ratio", 4))
+        macs = cfg["B"] * cfg["H"] * cfg["S_kv"] * cfg["Dh"]
+        byt = cfg["B"] * kvh * cfg["S_kv"] * cfg["Dh"] * 2
+        return {"macs": macs, "bytes": byt}
+    if layer_type == "moe_gemm":
+        per_expert = cfg["tokens"] * cfg["topk"] / max(1, cfg["E"])
+        macs = 3 * cfg["tokens"] * cfg["topk"] * cfg["d_model"] * cfg["d_ff"]
+        weights = 3 * cfg["E"] * cfg["d_model"] * cfg["d_ff"]
+        return {"macs": macs, "weights": weights, "per_expert": per_expert}
+    if layer_type == "ssd_scan":
+        macs = cfg["B"] * cfg["S"] * cfg["H"] * cfg["P"] * (2 * cfg["N"] + 128)
+        byt = cfg["B"] * cfg["S"] * (2 * cfg["H"] * cfg["P"] + 2 * cfg["N"])
+        return {"macs": macs, "bytes": byt}
+    if layer_type == "embed":
+        return {"bytes": cfg["tokens"] * cfg["d_model"], "macs": cfg["tokens"] * cfg["d_model"]}
+    return {}
+
+
+def feature_names(layer_type: str, params: tuple[str, ...]) -> tuple[str, ...]:
+    probe = {p: 2 for p in params}
+    probe.setdefault("F", 1)
+    return params + tuple(derived_features(layer_type, probe).keys())

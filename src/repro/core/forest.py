@@ -1,0 +1,200 @@
+"""Random-Forest regression from scratch (numpy).
+
+sklearn is not available in this environment, and the estimator is part of the
+paper's substrate, so we implement CART regression trees + bagging ourselves.
+Split search is the exact greedy variance-reduction criterion, vectorised with
+prefix sums over per-feature sorted orders.  Predictions of a forest are the
+mean over trees (each tree predicts the mean target of the reached leaf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class _Tree:
+    feature: np.ndarray  # (nodes,) int32, -1 for leaves
+    threshold: np.ndarray  # (nodes,) float64
+    left: np.ndarray  # (nodes,) int32
+    right: np.ndarray  # (nodes,) int32
+    value: np.ndarray  # (nodes,) float64
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        n = X.shape[0]
+        node = np.zeros(n, dtype=np.int32)
+        # Iterate until every sample reached a leaf; tree depth bounds the loop.
+        while True:
+            feat = self.feature[node]
+            active = feat >= 0
+            if not np.any(active):
+                break
+            f = feat[active]
+            go_left = X[active, f] <= self.threshold[node[active]]
+            nxt = np.where(go_left, self.left[node[active]], self.right[node[active]])
+            node[active] = nxt
+        return self.value[node]
+
+
+def _build_tree(
+    X: np.ndarray,
+    y: np.ndarray,
+    rng: np.random.Generator,
+    max_depth: int,
+    min_samples_leaf: int,
+    max_features: int,
+) -> _Tree:
+    n_samples, n_features = X.shape
+    feature: list[int] = []
+    threshold: list[float] = []
+    left: list[int] = []
+    right: list[int] = []
+    value: list[float] = []
+
+    def new_node() -> int:
+        feature.append(-1)
+        threshold.append(0.0)
+        left.append(-1)
+        right.append(-1)
+        value.append(0.0)
+        return len(feature) - 1
+
+    # Explicit stack instead of recursion: (node_id, sample_indices, depth).
+    root = new_node()
+    stack: list[tuple[int, np.ndarray, int]] = [(root, np.arange(n_samples), 0)]
+    while stack:
+        node_id, idx, depth = stack.pop()
+        y_node = y[idx]
+        value[node_id] = float(y_node.mean())
+        if depth >= max_depth or idx.size < 2 * min_samples_leaf or np.all(y_node == y_node[0]):
+            continue
+        feats = rng.choice(n_features, size=min(max_features, n_features), replace=False)
+        best_gain = 0.0
+        best_feat = -1
+        best_thr = 0.0
+        total_sum = y_node.sum()
+        total_sq = float((y_node**2).sum())
+        n = idx.size
+        parent_sse = total_sq - total_sum**2 / n
+        for f in feats:
+            xs = X[idx, f]
+            order = np.argsort(xs, kind="stable")
+            xs_s = xs[order]
+            ys_s = y_node[order]
+            # candidate split after position i (1-based prefix)
+            csum = np.cumsum(ys_s)
+            csq = np.cumsum(ys_s**2)
+            nl = np.arange(1, n)
+            valid = xs_s[:-1] < xs_s[1:]  # only between distinct x values
+            valid &= (nl >= min_samples_leaf) & ((n - nl) >= min_samples_leaf)
+            if not np.any(valid):
+                continue
+            sum_l = csum[:-1]
+            sq_l = csq[:-1]
+            sse_l = sq_l - sum_l**2 / nl
+            nr = n - nl
+            sum_r = total_sum - sum_l
+            sq_r = total_sq - sq_l
+            sse_r = sq_r - sum_r**2 / nr
+            gain = parent_sse - (sse_l + sse_r)
+            gain = np.where(valid, gain, -np.inf)
+            j = int(np.argmax(gain))
+            if gain[j] > best_gain:
+                best_gain = float(gain[j])
+                best_feat = int(f)
+                best_thr = float(0.5 * (xs_s[j] + xs_s[j + 1]))
+        if best_feat < 0:
+            continue
+        mask = X[idx, best_feat] <= best_thr
+        li, ri = idx[mask], idx[~mask]
+        if li.size == 0 or ri.size == 0:
+            continue
+        lid, rid = new_node(), new_node()
+        feature[node_id] = best_feat
+        threshold[node_id] = best_thr
+        left[node_id] = lid
+        right[node_id] = rid
+        stack.append((lid, li, depth + 1))
+        stack.append((rid, ri, depth + 1))
+
+    return _Tree(
+        feature=np.asarray(feature, dtype=np.int32),
+        threshold=np.asarray(threshold, dtype=np.float64),
+        left=np.asarray(left, dtype=np.int32),
+        right=np.asarray(right, dtype=np.int32),
+        value=np.asarray(value, dtype=np.float64),
+    )
+
+
+class RandomForestRegressor:
+    """Bagged CART regression forest (mean aggregation)."""
+
+    def __init__(
+        self,
+        n_estimators: int = 32,
+        max_depth: int = 18,
+        min_samples_leaf: int = 1,
+        max_features: float | str = 1.0,
+        bootstrap: bool = True,
+        seed: int = 0,
+    ) -> None:
+        self.n_estimators = n_estimators
+        self.max_depth = max_depth
+        self.min_samples_leaf = min_samples_leaf
+        self.max_features = max_features
+        self.bootstrap = bootstrap
+        self.seed = seed
+        self._trees: list[_Tree] = []
+
+    def _n_features_per_split(self, n_features: int) -> int:
+        mf = self.max_features
+        if mf == "sqrt":
+            return max(1, int(np.sqrt(n_features)))
+        if isinstance(mf, float):
+            return max(1, int(round(mf * n_features)))
+        return max(1, int(mf))
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "RandomForestRegressor":
+        X = np.asarray(X, dtype=np.float64)
+        y = np.asarray(y, dtype=np.float64)
+        if X.ndim != 2 or y.ndim != 1 or X.shape[0] != y.shape[0]:
+            raise ValueError(f"bad shapes X={X.shape} y={y.shape}")
+        rng = np.random.default_rng(self.seed)
+        n = X.shape[0]
+        mf = self._n_features_per_split(X.shape[1])
+        self._trees = []
+        for _ in range(self.n_estimators):
+            if self.bootstrap:
+                idx = rng.integers(0, n, size=n)
+            else:
+                idx = np.arange(n)
+            tree = _build_tree(
+                X[idx], y[idx], rng, self.max_depth, self.min_samples_leaf, mf
+            )
+            self._trees.append(tree)
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        X = np.asarray(X, dtype=np.float64)
+        if not self._trees:
+            raise RuntimeError("fit() before predict()")
+        acc = np.zeros(X.shape[0], dtype=np.float64)
+        for t in self._trees:
+            acc += t.predict(X)
+        return acc / len(self._trees)
+
+
+def mape(y_true: np.ndarray, y_pred: np.ndarray) -> float:
+    """Mean absolute percentage error (paper's headline metric), in percent."""
+    y_true = np.asarray(y_true, dtype=np.float64)
+    y_pred = np.asarray(y_pred, dtype=np.float64)
+    return float(np.mean(np.abs((y_pred - y_true) / y_true)) * 100.0)
+
+
+def rmspe(y_true: np.ndarray, y_pred: np.ndarray) -> float:
+    """Root-mean-square percentage error, in percent."""
+    y_true = np.asarray(y_true, dtype=np.float64)
+    y_pred = np.asarray(y_pred, dtype=np.float64)
+    return float(np.sqrt(np.mean(((y_pred - y_true) / y_true) ** 2)) * 100.0)

@@ -1,0 +1,192 @@
+"""Whole-model decomposition: ModelConfig x InputShape x mesh -> building blocks.
+
+This is the bridge between the paper's methodology and the framework: any of
+the 10 assigned architectures decomposes into per-device building-block
+instances (attention block, MLP block, MoE block, SSD block, embed, LM head)
+whose layer configurations live in the TPU-v5e platform's parameter spaces.
+The PR-trained single-layer estimators then predict per-block times, combined
+per Eq. 9-12 into a step-time estimate -- the LM-transformer analogue of the
+paper's MobileNet/ResNet whole-DNN estimation.
+
+Sharding-awareness: dims are *per-device* under the given (dp, tp) mesh
+factors, and every block carries its collective payload so the Eq.-9 max rule
+(compute/DMA/ICI overlap) applies on the sharded platform.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+from repro.core.blocks import Block
+from repro.core.prs import Config
+from repro.models.config import InputShape, ModelConfig
+
+
+def _head_policy(cfg: ModelConfig, tp: int) -> str:
+    if tp == 1 or cfg.n_kv_heads % tp == 0:
+        return "kv_sharded"
+    if cfg.n_heads % tp == 0:
+        return "q_sharded"
+    return "replicated"
+
+
+def decompose(
+    cfg: ModelConfig,
+    shape: InputShape,
+    dp: int,
+    tp: int,
+    train_factor: float = 3.0,
+) -> list[Block]:
+    """Per-device building blocks of one step.  train_factor ~ (fwd+bwd)/fwd."""
+    is_train = shape.kind == "train"
+    is_decode = shape.kind == "decode"
+    rep = train_factor if is_train else 1.0
+    b_loc = max(1, shape.global_batch // dp)
+    s = 1 if is_decode else shape.seq_len
+    t_loc = b_loc * s
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    hd = cfg.head_dim
+    policy = _head_policy(cfg, tp)
+    h_loc = cfg.n_heads // tp if policy in ("kv_sharded", "q_sharded") else cfg.n_heads
+    kv_loc = cfg.n_kv_heads // tp if policy == "kv_sharded" else cfg.n_kv_heads
+    kv_ratio = max(1, h_loc // max(1, kv_loc))
+
+    blocks: list[Block] = []
+    coll_act = t_loc * d * 2.0  # one bf16 activation all-reduce payload
+
+    def attn_block() -> Block:
+        layers: list[tuple[str, Config]] = [
+            ("dense", {"tokens": t_loc, "d_in": d, "d_out": (h_loc + 2 * kv_loc) * hd}),
+        ]
+        if is_decode:
+            layers.append(
+                ("attention_decode", {"B": b_loc, "S_kv": shape.seq_len, "H": h_loc, "Dh": hd, "kv_ratio": kv_ratio})
+            )
+        else:
+            layers.append(
+                ("attention_prefill", {"B": b_loc, "S": s, "H": h_loc, "Dh": hd, "kv_ratio": kv_ratio})
+            )
+        layers.append(("dense", {"tokens": t_loc, "d_in": h_loc * hd, "d_out": d}))
+        return Block(kind="attn", layers=tuple(layers), collective_bytes=coll_act, repeat=1)
+
+    def mlp_block() -> Block:
+        f_loc = max(1, f // tp)
+        n_in = 2 if cfg.mlp == "swiglu" else 1
+        layers = [("dense", {"tokens": t_loc, "d_in": d, "d_out": f_loc})] * n_in
+        layers.append(("dense", {"tokens": t_loc, "d_in": f_loc, "d_out": d}))
+        return Block(kind="mlp", layers=tuple(layers), collective_bytes=coll_act, repeat=1)
+
+    def moe_block() -> Block:
+        e_loc = max(1, cfg.moe_experts // tp)
+        layers = [
+            ("dense", {"tokens": t_loc, "d_in": d, "d_out": cfg.moe_experts}),  # router
+            (
+                "moe_gemm",
+                {
+                    "tokens": max(1, t_loc // tp),
+                    "d_model": d,
+                    "d_ff": f,
+                    "E": e_loc,
+                    "topk": cfg.moe_top_k,
+                },
+            ),
+        ]
+        return Block(kind="moe", layers=tuple(layers), collective_bytes=2 * coll_act, repeat=1)
+
+    def ssd_block() -> Block:
+        di_loc = max(1, cfg.d_inner // tp)
+        h_ssm = max(1, cfg.ssm_heads // tp)
+        layers = [
+            ("dense", {"tokens": t_loc, "d_in": d, "d_out": 2 * di_loc + 2 * cfg.ssm_state + cfg.ssm_heads}),
+            ("ssd_scan", {"B": b_loc, "S": s, "H": h_ssm, "P": cfg.ssm_headdim, "N": cfg.ssm_state}),
+            ("dense", {"tokens": t_loc, "d_in": di_loc, "d_out": d}),
+        ]
+        return Block(kind="ssd", layers=tuple(layers), collective_bytes=coll_act, repeat=1)
+
+    # ---- embedding ----
+    blocks.append(
+        Block(
+            kind="embed",
+            layers=(("embed", {"tokens": t_loc, "vocab": v, "d_model": d}),),
+            repeat=rep,
+        )
+    )
+
+    # ---- body ----
+    def rep_block(blk: Block, n: int) -> Block:
+        return Block(kind=blk.kind, layers=blk.layers, collective_bytes=blk.collective_bytes, repeat=n * rep)
+
+    if cfg.family in ("dense", "vlm"):
+        blocks += [rep_block(attn_block(), cfg.n_layers), rep_block(mlp_block(), cfg.n_layers)]
+    elif cfg.family == "moe":
+        blocks += [rep_block(attn_block(), cfg.n_layers), rep_block(moe_block(), cfg.n_layers)]
+    elif cfg.family == "ssm":
+        blocks += [rep_block(ssd_block(), cfg.n_layers)]
+    elif cfg.family == "hybrid":
+        n_shared = cfg.n_layers // max(1, cfg.attn_every)
+        blocks += [
+            rep_block(ssd_block(), cfg.n_layers),
+            rep_block(attn_block(), n_shared),
+            rep_block(mlp_block(), n_shared),
+        ]
+    elif cfg.family == "audio":
+        if not is_decode:
+            enc_t = b_loc * cfg.encoder_seq
+            enc_attn = Block(
+                kind="attn",
+                layers=(
+                    ("dense", {"tokens": enc_t, "d_in": d, "d_out": (h_loc + 2 * kv_loc) * hd}),
+                    ("attention_prefill", {"B": b_loc, "S": cfg.encoder_seq, "H": h_loc, "Dh": hd, "kv_ratio": kv_ratio}),
+                    ("dense", {"tokens": enc_t, "d_in": h_loc * hd, "d_out": d}),
+                ),
+                collective_bytes=enc_t * d * 2.0,
+            )
+            enc_mlp = Block(
+                kind="mlp",
+                layers=(
+                    ("dense", {"tokens": enc_t, "d_in": d, "d_out": max(1, f // tp)}),
+                    ("dense", {"tokens": enc_t, "d_in": max(1, f // tp), "d_out": d}),
+                ),
+                collective_bytes=enc_t * d * 2.0,
+            )
+            blocks += [rep_block(enc_attn, cfg.n_encoder_layers), rep_block(enc_mlp, cfg.n_encoder_layers)]
+        # decoder: self-attn + cross-attn + mlp
+        cross = Block(
+            kind="attn",
+            layers=(
+                ("dense", {"tokens": t_loc, "d_in": d, "d_out": h_loc * hd}),
+                ("attention_decode" if is_decode else "attention_prefill",
+                 ({"B": b_loc, "S_kv": cfg.encoder_seq, "H": h_loc, "Dh": hd, "kv_ratio": kv_ratio}
+                  if is_decode
+                  else {"B": b_loc, "S": cfg.encoder_seq, "H": h_loc, "Dh": hd, "kv_ratio": kv_ratio})),
+                ("dense", {"tokens": t_loc, "d_in": h_loc * hd, "d_out": d}),
+            ),
+            collective_bytes=coll_act,
+        )
+        blocks += [
+            rep_block(attn_block(), cfg.n_layers),
+            rep_block(cross, cfg.n_layers),
+            rep_block(mlp_block(), cfg.n_layers),
+        ]
+    else:
+        raise ValueError(cfg.family)
+
+    # ---- LM head ----
+    blocks.append(
+        Block(
+            kind="mlp",
+            layers=(("dense", {"tokens": t_loc, "d_in": d, "d_out": max(1, v // tp)}),),
+            collective_bytes=0.0,
+            repeat=rep,
+        )
+    )
+    return blocks
+
+
+def simulate_network(platform, blocks: Sequence[Block]) -> float:
+    """'Measure' the whole network on a simulated platform (Table-2 ground truth)."""
+    t = 0.0
+    for b in blocks:
+        t += platform.measure_block(list(b.layers), collective_bytes=b.collective_bytes) * b.repeat
+    return t

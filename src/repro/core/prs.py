@@ -1,0 +1,103 @@
+"""Performance-Representative (PR) sets, sampling, and PR mapping (Eq. 2-8).
+
+A layer's parameter space is a mapping ``param -> (lo, hi)`` (inclusive integer
+ranges).  Given per-parameter step widths ``W`` (from Algorithm 1 or white-box
+knowledge) the PR set is the grid ``{x_p * w_p : x_p in N}`` clipped to the
+range (Eq. 2/4).  Estimation-time queries are mapped onto their PR with
+``x_p = ceil(p / w_p)`` (Eq. 7/8).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Mapping
+
+import numpy as np
+
+Config = dict[str, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpace:
+    """Integer hyper-box of layer parameters, e.g. ``{"C": (1, 512)}``."""
+
+    ranges: Mapping[str, tuple[int, int]]
+    fixed: Mapping[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def params(self) -> tuple[str, ...]:
+        return tuple(self.ranges.keys())
+
+    def size(self) -> int:
+        n = 1
+        for lo, hi in self.ranges.values():
+            n *= hi - lo + 1
+        return n
+
+    def with_fixed(self, cfg: Config) -> Config:
+        out = dict(self.fixed)
+        out.update(cfg)
+        return out
+
+
+def pr_values(lo: int, hi: int, width: int) -> np.ndarray:
+    """All PR values of one parameter within [lo, hi]."""
+    if width <= 1:
+        return np.arange(lo, hi + 1)
+    first = max(width, int(math.ceil(lo / width)) * width)
+    if first > hi:
+        # Range too small to contain a full step; the only representative is hi.
+        return np.array([hi])
+    return np.arange(first, hi + 1, width)
+
+
+def count_pr_configs(space: ParamSpace, widths: Mapping[str, int]) -> int:
+    """|PR set| (the paper quotes e.g. 1 493 520 for UltraTrail Conv1D)."""
+    n = 1
+    for p, (lo, hi) in space.ranges.items():
+        n *= len(pr_values(lo, hi, widths.get(p, 1)))
+    return n
+
+
+def map_to_pr(cfg: Config, widths: Mapping[str, int], space: ParamSpace | None = None) -> Config:
+    """Eq. 7/8: snap every parameter to the next-larger multiple of its width."""
+    out = dict(cfg)
+    for p, w in widths.items():
+        if p in out and w > 1:
+            snapped = int(math.ceil(out[p] / w)) * w
+            if space is not None and p in space.ranges:
+                lo, hi = space.ranges[p]
+                snapped = min(snapped, int(math.floor(hi / w)) * w) if hi >= w else hi
+                snapped = max(snapped, w)
+            out[p] = snapped
+    return out
+
+
+def sample_pr_configs(
+    space: ParamSpace,
+    widths: Mapping[str, int],
+    n: int,
+    rng: np.random.Generator,
+) -> list[Config]:
+    """Uniformly sample ``n`` configurations from the PR set."""
+    per_param = {p: pr_values(lo, hi, widths.get(p, 1)) for p, (lo, hi) in space.ranges.items()}
+    out: list[Config] = []
+    for _ in range(n):
+        cfg = {p: int(rng.choice(vals)) for p, vals in per_param.items()}
+        out.append(space.with_fixed(cfg))
+    return out
+
+
+def sample_random_configs(space: ParamSpace, n: int, rng: np.random.Generator) -> list[Config]:
+    """Uniformly sample ``n`` configurations from the *complete* space."""
+    out: list[Config] = []
+    for _ in range(n):
+        cfg = {p: int(rng.integers(lo, hi + 1)) for p, (lo, hi) in space.ranges.items()}
+        out.append(space.with_fixed(cfg))
+    return out
+
+
+def configs_to_matrix(configs: Iterable[Config], params: tuple[str, ...]) -> np.ndarray:
+    """Feature matrix in a fixed parameter order."""
+    return np.array([[cfg[p] for p in params] for cfg in configs], dtype=np.float64)

@@ -1,0 +1,82 @@
+"""Initial parameter-sweep benchmarks (the first phase in Fig. 1).
+
+For each relevant parameter we sweep a stride-1 window (anchored at the
+platform's default configuration) while holding every other parameter at its
+default.  Stride-1 matters: a coarser stride can alias away small step widths
+(e.g. the TPU sublane width of 8).  The window length just needs to cover a
+handful of steps for the peak-distance estimate to be robust.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.accelerators.base import Platform
+from repro.core import steps
+from repro.core.prs import Config
+
+
+def sweep_window(lo: int, hi: int, anchor: int, n_points: int = 384) -> np.ndarray:
+    """Stride-1 integer window of ``n_points`` inside [lo, hi] near ``anchor``."""
+    start = max(lo, min(anchor, hi - n_points + 1))
+    stop = min(hi, start + n_points - 1)
+    return np.arange(start, stop + 1)
+
+
+def run_sweeps(
+    platform: Platform,
+    layer_type: str,
+    params: Sequence[str] | None = None,
+    n_points: int = 384,
+) -> dict[str, tuple[np.ndarray, np.ndarray]]:
+    """Sweep each parameter of ``layer_type`` -> ``{param: (x, y)}``."""
+    space = platform.param_space(layer_type)
+    defaults = platform.defaults(layer_type)
+    params = tuple(params) if params is not None else space.params
+    out: dict[str, tuple[np.ndarray, np.ndarray]] = {}
+    for p in params:
+        lo, hi = space.ranges[p]
+        xs = sweep_window(lo, hi, defaults.get(p, lo), n_points)
+        configs: list[Config] = []
+        for v in xs:
+            cfg = dict(defaults)
+            cfg[p] = int(v)
+            configs.append(space.with_fixed(cfg))
+        ys = platform.measure_many(layer_type, configs)
+        out[p] = (xs, ys)
+    return out
+
+
+def discover_step_widths(
+    platform: Platform,
+    layer_type: str,
+    threshold_linear: float = 0.02,
+    n_points: int = 384,
+) -> tuple[dict[str, int], dict[str, tuple[np.ndarray, np.ndarray]], int]:
+    """Determine step widths per the knowledge tier (Fig. 3).
+
+    * white box: documented widths, no sweeps needed;
+    * gray box: documented widths for the documented dims, sweeps confirm
+      them and discover the rest;
+    * black box: everything from sweeps (Algorithm 1).
+
+    Returns (widths, sweeps_run, n_measurements_spent).
+    """
+    known = platform.known_step_widths(layer_type) or {}
+    space = platform.param_space(layer_type)
+    if platform.knowledge == "white":
+        widths = {p: known.get(p, 1) for p in space.params}
+        return widths, {}, 0
+
+    sweeps = run_sweeps(platform, layer_type, n_points=n_points)
+    n_meas = sum(len(x) for x, _ in sweeps.values())
+    discovered = steps.determine_step_widths(sweeps, threshold_linear)
+    widths = dict(discovered)
+    for p, w in known.items():
+        # Gray box: the documented quantisation wins over a noisy sweep
+        # estimate (the sweep's role is confirmation, Fig. 3).
+        if p in widths and w > 1:
+            widths[p] = w
+    return widths, sweeps, n_meas

@@ -1,0 +1,141 @@
+"""Mesh context + logical-axis sharding rules (MaxText-style).
+
+Model code annotates activations/params with *logical* axis names; a
+``ShardingRules`` object maps them onto the physical mesh axes.  The production
+meshes are (16, 16) -> ("data", "model") and (2, 16, 16) ->
+("pod", "data", "model"); smoke tests use a (1, 1) mesh with the same names so
+there is exactly one model code path.
+
+Logical axes:
+  batch     -- data parallel (pod+data)
+  fsdp      -- weight/optimizer sharding over the data axis (ZeRO-style)
+  tp        -- tensor parallel (heads / ffn / experts / vocab)
+  none      -- replicated
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Physical realisation of the logical axes on a concrete mesh."""
+
+    mesh: Mesh
+    #: mesh axes that make up data parallelism, e.g. ("pod", "data")
+    dp_axes: tuple[str, ...]
+    #: mesh axis for tensor/expert parallelism
+    tp_axis: str = "model"
+    #: shard parameters & optimizer state over the data axis too (ZeRO/FSDP)
+    fsdp: bool = False
+    #: sequence parallelism: the model axis shards *tokens* instead of weights
+    #: (for archs whose head counts don't divide tp -- see EXPERIMENTS.md §Perf)
+    seq_parallel: bool = False
+
+    @property
+    def dp_size(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.dp_axes]))
+
+    @property
+    def tp_size(self) -> int:
+        return int(self.mesh.shape[self.tp_axis])
+
+    def spec(self, *logical: str | None) -> P:
+        """Translate logical axis names to a PartitionSpec."""
+        phys: list[Any] = []
+        for name in logical:
+            if name is None or name == "none":
+                phys.append(None)
+            elif name == "batch":
+                phys.append(self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0])
+            elif name == "fsdp":
+                phys.append(self.dp_axes if (self.fsdp and len(self.dp_axes) > 1)
+                            else (self.dp_axes[0] if self.fsdp else None))
+            elif name == "tp":
+                phys.append(None if self.seq_parallel else self.tp_axis)
+            elif name == "seq":
+                phys.append(self.tp_axis if self.seq_parallel else None)
+            else:
+                raise KeyError(f"unknown logical axis {name!r}")
+        return P(*phys)
+
+    def sharding(self, *logical: str | None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+
+def for_mesh(mesh: Mesh, fsdp: bool = False, seq_parallel: bool = False) -> ShardingRules:
+    """Build rules from a mesh created by ``launch.mesh.make_production_mesh``."""
+    names = mesh.axis_names
+    dp = tuple(a for a in names if a in ("pod", "data", "replica"))
+    tp = "model" if "model" in names else names[-1]
+    return ShardingRules(
+        mesh=mesh, dp_axes=dp or (names[0],), tp_axis=tp, fsdp=fsdp, seq_parallel=seq_parallel
+    )
+
+
+# --------------------------------------------------------------------------------
+# Active-rules context: model code calls shard(x, "batch", None, "tp") without
+# threading the rules object through every function signature.
+# --------------------------------------------------------------------------------
+class _State(threading.local):
+    rules: ShardingRules | None = None
+
+
+_STATE = _State()
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules):
+    prev = _STATE.rules
+    _STATE.rules = rules
+    try:
+        with jax.sharding.set_mesh(rules.mesh):
+            yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def active_rules() -> ShardingRules | None:
+    return _STATE.rules
+
+
+def shard(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Sharding constraint by logical axis names; no-op without active rules.
+
+    Axes whose mesh size does not divide the array dim are dropped (e.g. a
+    batch of 1 in the long-context decode cell cannot shard over dp=32).
+    """
+    rules = _STATE.rules
+    if rules is None:
+        return x
+    spec = sanitize_spec(rules, rules.spec(*logical), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def sanitize_spec(rules: ShardingRules, spec: P, shape: tuple[int, ...]) -> P:
+    """Drop spec entries that do not divide the corresponding dimension."""
+    sizes = dict(rules.mesh.shape)  # works for Mesh and AbstractMesh
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = int(np.prod([sizes[a] for a in axes]))
+        out.append(entry if dim % n == 0 else None)
+    return P(*out)
+
+
+def single_device_rules() -> ShardingRules:
+    """A (1,1) mesh with production axis names for tests/examples on CPU."""
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(dev, ("data", "model"))
+    return for_mesh(mesh)

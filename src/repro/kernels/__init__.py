@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+The paper's contribution is a benchmarking methodology (no kernel of its own);
+these kernels are the perf-critical layers of the *framework* the methodology
+models: flash attention (prefill/train) and the Mamba2 SSD scan.  Validated
+against ref.py oracles in interpret mode on CPU; targeted at TPU via
+pl.pallas_call with explicit BlockSpec VMEM tiling.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth for allclose tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True
+) -> jax.Array:
+    """Materialised-score GQA attention.  q: (B,Sq,H,D), k/v: (B,Skv,KVH,D)."""
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    scores = scores * (d**-0.5)
+    if causal:
+        mask = jnp.arange(skv)[None, :] <= jnp.arange(sq)[:, None]
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def ssd_ref(
+    xbar: jax.Array,  # (B, S, H, P)
+    log_da: jax.Array,  # (B, S, H)
+    bmat: jax.Array,  # (B, S, N)
+    cmat: jax.Array,  # (B, S, N)
+    state0: jax.Array | None = None,  # (B, H, P, N)
+):
+    """Naive O(S) state-space recurrence (the SSD definition)."""
+    bsz, s, h, p = xbar.shape
+    n = bmat.shape[-1]
+    if state0 is None:
+        state0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(state, t):
+        xt, at, bt, ct = t
+        state = state * jnp.exp(at)[..., None, None] + jnp.einsum(
+            "bn,bhp->bhpn", bt.astype(jnp.float32), xt.astype(jnp.float32)
+        )
+        y = jnp.einsum("bhpn,bn->bhp", state, ct.astype(jnp.float32))
+        return state, y
+
+    xs = (
+        xbar.transpose(1, 0, 2, 3),
+        log_da.transpose(1, 0, 2),
+        bmat.transpose(1, 0, 2),
+        cmat.transpose(1, 0, 2),
+    )
+    state, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(xbar.dtype), state

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel for the Mamba2 chunked SSD scan.
+
+Grid: (batch, heads, num_chunks) -- the chunk axis is sequential on TPU, so the
+inter-chunk SSM state (headdim x dstate, fp32) lives in VMEM scratch and is
+carried across chunk iterations, exactly like the reference ``lax.scan``.
+
+Per chunk the kernel computes (Q = chunk length, P = headdim, N = dstate):
+  intra:  Y_intra = (L . (C B^T)) Xbar           -- two MXU matmuls (QxQ, QxP)
+  inter:  Y_inter = diag(exp(a_cum)) C S_prev    -- (QxN)x(NxP)
+  state:  S_new   = exp(a_last) S_prev + (decay_out . B)^T Xbar
+
+VMEM working set: x (Q x P), B/C (Q x N), L (Q x Q) fp32 -- with Q = 128,
+P = 64..128, N = 64..128 that is < 1 MiB, leaving VMEM for pipelining.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    x_ref,  # (1, Q, 1, P)
+    a_ref,  # (1, Q, 1)   log decay
+    b_ref,  # (1, Q, N)
+    c_ref,  # (1, Q, N)
+    y_ref,  # (1, Q, 1, P)
+    state_ref,  # scratch (P, N) fp32
+    *,
+    chunk: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # (Q, P)
+    a = a_ref[0, :, 0].astype(jnp.float32)  # (Q,)
+    bm = b_ref[0].astype(jnp.float32)  # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)  # (Q, N)
+
+    a_cum = jnp.cumsum(a)  # (Q,) decay since chunk start
+    # L[i, j] = exp(a_cum_i - a_cum_j) for i >= j else 0
+    diff = a_cum[:, None] - a_cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    lmat = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+
+    scores = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, Q) = C_i . B_j
+    w = scores * lmat
+    y_intra = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, P)
+
+    state = state_ref[...]  # (P, N)
+    decay_in = jnp.exp(a_cum)[:, None]  # (Q, 1)
+    y_inter = (
+        jax.lax.dot_general(cm, state, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+        * decay_in
+    )  # (Q, P)
+
+    a_last = a_cum[-1]
+    decay_out = jnp.exp(a_last - a_cum)[:, None]  # (Q, 1)
+    state_upd = jax.lax.dot_general(
+        x, bm * decay_out, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (P, N)
+    state_ref[...] = state * jnp.exp(a_last) + state_upd
+
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+
+def ssd_scan_pallas(
+    xbar: jax.Array,  # (B, S, H, P)
+    log_da: jax.Array,  # (B, S, H)
+    bmat: jax.Array,  # (B, S, N)
+    cmat: jax.Array,  # (B, S, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, h, p = xbar.shape
+    n = bmat.shape[-1]
+    assert s % chunk == 0, "pad sequence before calling (see ops.py)"
+    nc = s // chunk
+    grid = (b, h, nc)
+    kernel = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, ic: (b_, ic, h_, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b_, h_, ic: (b_, ic, h_)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, ic: (b_, ic, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, ic: (b_, ic, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, ic: (b_, ic, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, p), xbar.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xbar, log_da, bmat, cmat)

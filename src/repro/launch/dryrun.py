@@ -1,0 +1,457 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: every cell must
+``.lower().compile()`` on the single-pod (16,16) mesh and the multi-pod
+(2,16,16) mesh, with ShapeDtypeStruct inputs (no allocation).
+
+Each cell runs THREE compiles:
+  1. the **deployment pass** -- scanned layer stacks, exactly what a real job
+     runs; proves compilability and records ``memory_analysis()``;
+  2+3. two **cost probes** at 1 and 2 repeating units (layers/groups), fully
+     unrolled including inner chunk loops.  XLA's cost analysis visits a
+     while-loop body once (verified empirically), so scanned stacks undercount
+     FLOPs by ~n_layers; the probes are loop-free and therefore exact, and
+     layer-stack cost is exactly affine in the unit count, so the probe pair
+     extrapolates to exact full-model FLOPs / bytes / collective payloads.
+
+Artifacts go to experiments/artifacts/dryrun/<cell>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                       # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+      --shape train_4k --mesh multi --force
+  ... --microbatches 4 --remat dots --fsdp on   # perf-iteration knobs
+"""
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.data.pipeline import make_batch_specs
+from repro.distributed import for_mesh, use_rules
+from repro.launch import shardings as SH
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.models.config import SHAPES, InputShape, ModelConfig, shape_applicable
+from repro.models.kvcache import init_cache
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.accelerators.tpu_v5e import TPUv5eSim
+from repro.core.network import decompose
+from repro.roofline.analysis import analyze_compiled, collective_bytes_from_hlo
+from repro.train.steps import make_prefill_step, make_serve_step, make_train_step
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "artifacts", "dryrun")
+
+
+def _batch_structs(cfg: ModelConfig, shape: InputShape):
+    return {
+        k: jax.ShapeDtypeStruct(s, jnp.dtype(d))
+        for k, (s, d) in make_batch_specs(cfg, shape).items()
+    }
+
+
+def _params_structs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """6*N*D for training, 2*N_active per generated/processed token otherwise."""
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_act * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.seq_len * shape.global_batch
+    return 2.0 * n_act * shape.global_batch  # decode: one token per sequence
+
+
+def cell_id(arch: str, shape: str, mesh: str, tag: str = "base") -> str:
+    return f"{arch}__{shape}__{mesh}__{tag}"
+
+
+@dataclasses.dataclass
+class DryrunKnobs:
+    """Perf-iteration levers (see EXPERIMENTS.md §Perf)."""
+
+    microbatches: int = 1
+    remat: str | None = None  # override cfg.remat
+    fsdp: bool | None = None  # override default fsdp policy
+    attention_block_k: int | None = None
+    capacity_factor: float | None = None
+    seq_parallel: bool = False  # SP mode: model axis shards tokens, not weights
+    tag: str = "base"
+
+
+#: archs whose params+optimizer need ZeRO/FSDP sharding to fit 16 GB HBM
+FSDP_DEFAULT = {"granite-20b", "granite-34b", "qwen3-moe-235b-a22b", "zamba2-2.7b"}
+
+
+def apply_knobs(cfg: ModelConfig, knobs: DryrunKnobs, probe: bool) -> ModelConfig:
+    repl = {"scan_layers": not probe, "inner_unroll": probe}
+    if knobs.remat:
+        repl["remat"] = knobs.remat
+    if knobs.attention_block_k:
+        repl["attention_block_k"] = knobs.attention_block_k
+    if knobs.capacity_factor:
+        repl["capacity_factor"] = knobs.capacity_factor
+    return dataclasses.replace(cfg, **repl)
+
+
+def _unit_count(cfg: ModelConfig) -> int:
+    """Number of identical repeating units in the layer stack."""
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_every
+    return cfg.n_layers
+
+
+def _with_units(cfg: ModelConfig, units: int) -> ModelConfig:
+    if cfg.family == "hybrid":
+        return dataclasses.replace(cfg, n_layers=units * cfg.attn_every)
+    if cfg.family == "audio":
+        return dataclasses.replace(cfg, n_layers=units, n_encoder_layers=units)
+    return dataclasses.replace(cfg, n_layers=units)
+
+
+def _lower_and_compile(cfg: ModelConfig, shape: InputShape, rules, knobs: DryrunKnobs):
+    with use_rules(rules):
+        params_s = _params_structs(cfg)
+        p_specs = SH.param_specs(cfg, rules, params_s)
+        p_shard = SH.to_shardings(rules, p_specs)
+        batch_s = _batch_structs(cfg, shape)
+        b_specs = SH.batch_specs(cfg, rules, batch_s)
+        b_shard = SH.to_shardings(rules, b_specs)
+
+        t0 = time.perf_counter()
+        if shape.kind == "train":
+            opt_s = jax.eval_shape(lambda p: adamw_init(p), params_s)
+            o_shard = SH.to_shardings(rules, SH.opt_specs(p_specs))
+            fn = make_train_step(cfg, AdamWConfig(), n_microbatches=knobs.microbatches)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_s, opt_s, batch_s)
+        elif shape.kind == "prefill":
+            fn = make_prefill_step(cfg)
+            jitted = jax.jit(fn, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(params_s, batch_s)
+        else:  # decode
+            cache_s = init_cache(cfg, shape.global_batch, shape.seq_len, concrete=False)
+            c_specs = SH.cache_specs(cfg, rules, cache_s)
+            c_shard = SH.to_shardings(rules, c_specs)
+            fn = make_serve_step(cfg)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_shard, c_shard, b_shard),
+                out_shardings=(None, c_shard),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params_s, cache_s, batch_s)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+    return compiled, t_lower, t_compile
+
+
+def _probe_costs(cfg_probe: ModelConfig, shape: InputShape, rules, knobs: DryrunKnobs) -> dict:
+    compiled, _, t_compile = _lower_and_compile(cfg_probe, shape, rules, knobs)
+    cost = compiled.cost_analysis()
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    counts = coll.pop("_counts")
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "collective": coll,
+        "collective_counts": counts,
+        "compile_s": t_compile,
+    }
+
+
+def _metric_names(p: dict) -> list[str]:
+    return ["flops", "bytes"] + [f"coll:{k}" for k in p["collective"]]
+
+
+def _metric_vec(p: dict) -> "np.ndarray":
+    import numpy as np
+
+    return np.array([p["flops"], p["bytes"]] + list(p["collective"].values()))
+
+
+def _fit_and_eval(probes: list[tuple[int, int, dict]], basis, target) -> dict:
+    """Least-squares fit of cost(u, s) on a polynomial ``basis``; exact when
+    the basis spans the true cost structure (layer stacks are affine in u;
+    attention is quadratic in s, everything else affine in s).
+
+    probes: [(u, s, probe_costs)]; target: (u, s) to evaluate at.
+    Returns {"flops", "bytes", "collective": {...}}.
+    """
+    import numpy as np
+
+    A = np.array([basis(u, s) for u, s, _ in probes], dtype=np.float64)
+    Y = np.stack([_metric_vec(p) for _, _, p in probes])
+    coef, *_ = np.linalg.lstsq(A, Y, rcond=None)
+    out_vec = np.maximum(0.0, np.array(basis(*target), dtype=np.float64) @ coef)
+    names = _metric_names(probes[0][2])
+    flops, bytes_ = float(out_vec[0]), float(out_vec[1])
+    coll = {n.split(":", 1)[1]: float(v) for n, v in zip(names[2:], out_vec[2:])}
+    return {"flops": flops, "bytes": bytes_, "collective": coll}
+
+
+def _probe_plan(cfg: ModelConfig, shape: InputShape, dp: int, tp: int):
+    """Choose probe points + basis so the polynomial model is exact.
+
+    * default: cost affine in the unit count u at the true sequence length ->
+      2 probes (u=1,2), basis (u, 1);
+    * SSD-family train/prefill: unrolled chunk loops at the true S are
+      compile-prohibitive; cost is bilinear in (u, s) (attention-free), so
+      probe small s and solve basis (u*s, u, s, 1).  The hybrid's shared
+      attention adds a u*s^2 FLOP term; fitting it directly needs 3 s-values
+      at u=2 (compile-prohibitive), so instead the *known* attention-core
+      FLOPs (4 matmul-passes x b x h x s^2 x dh per applied block, x4 for
+      fwd+remat+bwd under remat=full) are subtracted from each probe,
+      the bilinear remainder is fitted, and the analytic term is added back
+      at the target point (error ~1%: masked-softmax elementwise flops).
+
+    Returns (points, basis, flops_correction(u, s) -> flops or None).
+    """
+    u_pair = (1, 2)
+    if cfg.family in ("ssm", "hybrid") and shape.kind in ("train", "prefill"):
+        s_vals = (512, 1024)
+        pts = [(u, s) for u in u_pair for s in s_vals]
+        basis = lambda u, s: (u * s, u, s, 1.0)
+        corr = None
+        if cfg.family == "hybrid":
+            b_loc = max(1, shape.global_batch // dp)
+            h_loc = cfg.n_heads // tp if cfg.n_heads % tp == 0 else cfg.n_heads
+            passes = 16.0 if shape.kind == "train" else 4.0  # fwd[+remat+bwd]
+
+            def corr(u, s, b=b_loc, h=h_loc, dh=cfg.head_dim, k=passes):
+                return u * k * b * h * float(s) * float(s) * dh
+
+        return pts, basis, corr
+    pts = [(u, shape.seq_len) for u in u_pair]
+    basis = lambda u, s: (u, 1.0)
+    return pts, basis, None
+
+
+def analytic_terms(cfg: ModelConfig, shape: InputShape, dp: int, tp: int) -> dict:
+    """Fusion-aware analytic compute/HBM terms from the v5e layer model.
+
+    The HLO 'bytes accessed' metric counts every intermediate touch of every
+    un-fused elementwise op (the CPU backend fuses far less than TPU), so it
+    overstates HBM traffic by orders of magnitude.  This analytic term counts
+    weights + necessary activation streaming per layer (TPUv5eSim._terms) --
+    what a fused TPU execution actually moves through HBM.
+    """
+    sim = TPUv5eSim()
+    blocks = decompose(cfg, shape, dp, tp)
+    flop_s = mem_s = 0.0
+    for b in blocks:
+        for lt, c in b.layers:
+            f, m = sim._terms(lt, c)
+            flop_s += f * b.repeat
+            mem_s += m * b.repeat
+    return {"compute_s": flop_s, "memory_s": mem_s}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, knobs: DryrunKnobs):
+    """Lower+compile one cell (deployment pass + 2 cost probes)."""
+    base_cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fsdp = knobs.fsdp if knobs.fsdp is not None else (arch in FSDP_DEFAULT)
+    if knobs.seq_parallel:
+        assert base_cfg.family in ("dense", "vlm"), "SP mode targets dense archs"
+        fsdp = True  # weights replicate over tp; optimizer must shard over data
+    rules = for_mesh(mesh, fsdp=fsdp, seq_parallel=knobs.seq_parallel)
+    chips = mesh.devices.size
+
+    # ---- deployment pass: scanned, exactly what a real job runs ----
+    cfg_full = apply_knobs(base_cfg, knobs, probe=False)
+    compiled, t_lower, t_compile = _lower_and_compile(cfg_full, shape, rules, knobs)
+    mem = compiled.memory_analysis()
+    mem_dict = {}
+    for attr in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_dict[attr] = int(v)
+    del compiled
+
+    # ---- cost probes (single-pod mesh only; §Roofline is single-pod) ----
+    if multi_pod:
+        art = {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": "multi",
+            "chips": int(chips),
+            "knobs": dataclasses.asdict(knobs),
+            "fsdp": fsdp,
+            "lower_s": t_lower,
+            "compile_s": t_compile,
+            "memory_analysis": mem_dict,
+            "note": "multi-pod pass proves the pod axis shards; roofline is single-pod",
+        }
+        return art
+
+    units = _unit_count(base_cfg)
+    pts, basis, flops_corr = _probe_plan(base_cfg, shape, rules.dp_size, rules.tp_size)
+    probes = []
+    probe_compile_s = []
+    for u, s in pts:
+        cfg_p = _with_units(base_cfg, u)
+        probe_shape = dataclasses.replace(shape, seq_len=s)
+        p = _probe_costs(apply_knobs(cfg_p, knobs, probe=True), probe_shape, rules, knobs)
+        if flops_corr is not None:
+            p["flops"] -= flops_corr(u, s)
+        probes.append((u, s, p))
+        probe_compile_s.append(p["compile_s"])
+    ex = _fit_and_eval(probes, basis, (units, shape.seq_len))
+    if flops_corr is not None:
+        ex["flops"] += flops_corr(units, shape.seq_len)
+
+    cost = {"flops": ex["flops"], "bytes accessed": ex["bytes"]}
+    terms = analyze_compiled(
+        cost, "", chips,
+        model_flops=model_flops(base_cfg, shape),
+        collective_bytes=ex["collective"],
+    )
+    ana = analytic_terms(base_cfg, shape, rules.dp_size, rules.tp_size)
+    # score-time model: HLO compute term (captures sharding waste) + analytic
+    # HBM term (captures what fused TPU execution actually streams) + ICI term
+    step_model = max(terms.compute_s, ana["memory_s"], terms.collective_s)
+    ideal = (terms.model_flops / chips) / 197e12
+    bottleneck_model = ["compute", "memory", "collective"][
+        [terms.compute_s, ana["memory_s"], terms.collective_s].index(step_model)
+    ]
+
+    art = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "chips": int(chips),
+        "knobs": dataclasses.asdict(knobs),
+        "fsdp": fsdp,
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "probe_compile_s": probe_compile_s,
+        "probe_points": pts,
+        "memory_analysis": mem_dict,
+        "cost": cost,
+        "collective": {"bytes": ex["collective"], "counts": probes[-1][2]["collective_counts"]},
+        "roofline": {
+            "flops": terms.flops,
+            "hbm_bytes": terms.hbm_bytes,
+            "collective_bytes": terms.collective_bytes,
+            "compute_s": terms.compute_s,
+            "memory_s_hlo": terms.memory_s,
+            "memory_s": ana["memory_s"],
+            "compute_s_analytic": ana["compute_s"],
+            "collective_s": terms.collective_s,
+            "bottleneck_hlo": terms.bottleneck,
+            "bottleneck": bottleneck_model,
+            "step_time_hlo_s": terms.step_time_s,
+            "step_time_s": step_model,
+            "model_flops": terms.model_flops,
+            "useful_flops_frac": terms.useful_flops_frac,
+            "roofline_frac_hlo": terms.roofline_frac,
+            "roofline_frac": ideal / step_model if step_model else 0.0,
+        },
+    }
+    return art
+
+
+def run_cells(archs, shapes, meshes, knobs: DryrunKnobs, force: bool = False, out_dir: str | None = None):
+    out_dir = out_dir or os.path.abspath(ART_DIR)
+    os.makedirs(out_dir, exist_ok=True)
+    results = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            if not shape_applicable(cfg, SHAPES[shape_name]):
+                print(f"SKIP {arch} x {shape_name}: inapplicable (see DESIGN.md)")
+                continue
+            for mesh_name in meshes:
+                cid = cell_id(arch, shape_name, mesh_name, knobs.tag)
+                path = os.path.join(out_dir, cid + ".json")
+                if os.path.exists(path) and not force:
+                    print(f"CACHED {cid}")
+                    with open(path) as f:
+                        results.append(json.load(f))
+                    continue
+                print(f"RUN {cid} ...", flush=True)
+                try:
+                    art = lower_cell(arch, shape_name, mesh_name == "multi", knobs)
+                except Exception as e:  # a failing cell is a bug; record it
+                    art = {
+                        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                        "knobs": dataclasses.asdict(knobs),
+                        "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                    print(f"FAIL {cid}: {e}")
+                with open(path, "w") as f:
+                    json.dump(art, f, indent=1)
+                if "roofline" in art:
+                    r = art["roofline"]
+                    print(
+                        f"OK {cid}: compile={art['compile_s']:.1f}s "
+                        f"bottleneck={r['bottleneck']} step={r['step_time_s']*1e3:.2f}ms "
+                        f"roofline_frac={r['roofline_frac']:.3f}",
+                        flush=True,
+                    )
+                results.append(art)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--tag", default="base")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default=None, choices=[None, "none", "full", "dots"])
+    ap.add_argument("--fsdp", default=None, choices=[None, "on", "off"])
+    ap.add_argument("--attention-block-k", type=int, default=None)
+    ap.add_argument("--seq-parallel", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    knobs = DryrunKnobs(
+        microbatches=args.microbatches,
+        remat=args.remat,
+        fsdp=None if args.fsdp is None else args.fsdp == "on",
+        attention_block_k=args.attention_block_k,
+        seq_parallel=args.seq_parallel,
+        tag=args.tag,
+    )
+    results = run_cells(archs, shapes, meshes, knobs, force=args.force, out_dir=args.out)
+    n_fail = sum(1 for r in results if "error" in r)
+    print(f"\n{len(results) - n_fail}/{len(results)} cells compiled OK")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

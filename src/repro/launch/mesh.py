@@ -1,0 +1,17 @@
+"""Production mesh factory.
+
+Defined as a function (not a module-level constant) so importing this module
+never touches jax device state -- jax locks the device count on first use,
+and only the dry-run is allowed to force 512 host devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2x16x16 = 512 chips across two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)

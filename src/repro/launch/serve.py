@@ -1,0 +1,78 @@
+"""Serving launcher: batched prefill + decode with KV/SSM caches.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --reduced \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.distributed import single_device_rules, use_rules
+from repro.models import transformer as T
+from repro.models.config import reduced
+from repro.models.kvcache import init_cache
+from repro.train.steps import make_serve_step
+
+
+def generate(cfg, params, prompts: np.ndarray, gen_len: int, extras: dict | None = None):
+    """Greedy generation: prefill via forward-with-cache, then decode steps."""
+    b, s = prompts.shape
+    cache = init_cache(cfg, b, s + gen_len)
+    if cfg.family == "audio":
+        cache.pop("enc_kv")  # computed at prefill
+
+    prefill = jax.jit(lambda p, batch, c: T.forward(p, cfg, batch, c))
+    serve_step = jax.jit(make_serve_step(cfg))
+
+    batch = {"tokens": jnp.asarray(prompts)}
+    if extras:
+        batch.update({k: jnp.asarray(v) for k, v in extras.items()})
+    logits, _, cache = prefill(params, batch, cache)
+    next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+
+    out = [next_tok]
+    for _ in range(gen_len - 1):
+        step_batch = {"tokens": out[-1][:, None]}
+        next_tok, cache = serve_step(params, cache, step_batch)
+        out.append(next_tok)
+    return jnp.stack(out, axis=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    rules = single_device_rules()
+    with use_rules(rules):
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        prompts = rng.integers(1, cfg.vocab, size=(args.batch, args.prompt_len)).astype(np.int32)
+        extras = {}
+        if cfg.family == "audio":
+            extras["frames"] = rng.standard_normal(
+                (args.batch, cfg.encoder_seq, cfg.d_model)
+            ).astype(np.float32) * 0.1
+        t0 = time.perf_counter()
+        tokens = generate(cfg, params, prompts, args.gen, extras)
+        dt = time.perf_counter() - t0
+    print(f"generated {tokens.shape} in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)\n{np.asarray(tokens)[:2]}")
+
+
+if __name__ == "__main__":
+    main()

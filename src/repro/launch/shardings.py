@@ -1,0 +1,181 @@
+"""Parameter / batch / cache PartitionSpec factories (DP+FSDP x TP x EP).
+
+Conventions (see DESIGN.md §5):
+  * "batch"  -> activations shard over the dp axes (pod+data),
+  * "fsdp"   -> params + optimizer moments additionally shard over the data
+                axes when rules.fsdp is on (ZeRO-style),
+  * "tp"     -> heads / d_ff / experts / vocab shard over the model axis,
+  * head-sharding follows attention.head_policy (q_sharded / kv_sharded /
+    replicated) so non-divisible head counts degrade gracefully,
+  * KV caches of kv-indivisible archs shard their *sequence* dim over tp
+    (flash-decode), all others shard kv-heads.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+from repro.distributed import ShardingRules
+from repro.models.config import InputShape, ModelConfig
+
+
+def _head_policy(cfg: ModelConfig, rules: ShardingRules) -> str:
+    tp = rules.tp_size
+    if tp == 1 or cfg.n_kv_heads % tp == 0:
+        return "kv_sharded"
+    if cfg.n_heads % tp == 0:
+        return "q_sharded"
+    return "replicated"
+
+
+def _vocab_divisible(cfg: ModelConfig, rules: ShardingRules) -> bool:
+    return cfg.vocab % rules.tp_size == 0
+
+
+def param_specs(cfg: ModelConfig, rules: ShardingRules, params_shape: Any) -> Any:
+    """PartitionSpec pytree matching ``init_params`` (built from its shapes)."""
+    policy = _head_policy(cfg, rules)
+    q_spec = "tp" if policy in ("kv_sharded", "q_sharded") else None
+    kv_spec = "tp" if policy == "kv_sharded" else None
+    h_div = cfg.ssm_state and cfg.ssm_heads % rules.tp_size == 0
+    ssm_h = "tp" if h_div else None
+    vocab_tp = _vocab_divisible(cfg, rules)
+
+    base: dict[str, tuple] = {
+        "embed": ("tp", "fsdp") if vocab_tp else (None, "tp"),
+        "lm_head": ("fsdp", "tp") if vocab_tp else ("tp", None),
+        "final_norm": (None,),
+        "enc_norm": (None,),
+        "ln1": (None,),
+        "ln2": (None,),
+        "lnx": (None,),
+        "ln": (None,),
+        # attention
+        "wq": ("fsdp", q_spec),
+        "wk": ("fsdp", kv_spec),
+        "wv": ("fsdp", kv_spec),
+        "wo": (q_spec, "fsdp"),
+        "bq": (q_spec,),
+        "bk": (kv_spec,),
+        "bv": (kv_spec,),
+        # mlp
+        "w_in": ("fsdp", "tp"),
+        "w_gate": ("fsdp", "tp"),
+        "w_out": ("tp", "fsdp"),
+        "b_in": ("tp",),
+        "b_out": (None,),
+        # moe (leading experts dim)
+        "w_router": (None, None),
+        # mamba
+        "w_z": ("fsdp", "tp"),
+        "w_x": ("fsdp", "tp"),
+        "w_b": ("fsdp", None),
+        "w_c": ("fsdp", None),
+        "w_dt": ("fsdp", None),
+        "w_conv_x": (None, "tp"),
+        "b_conv_x": ("tp",),
+        "w_conv_b": (None, None),
+        "b_conv_b": (None,),
+        "w_conv_c": (None, None),
+        "b_conv_c": (None,),
+        "dt_bias": (ssm_h,),
+        "a_log": (ssm_h,),
+        "d_skip": (ssm_h,),
+        "norm": ("tp",),
+    }
+
+    def spec_of(path, leaf) -> P:
+        keys = [k.key for k in path if isinstance(k, DictKey)]
+        name = keys[-1]
+        parent = keys[-2] if len(keys) > 1 else ""
+        if parent == "moe":
+            logical = {
+                "w_router": (None, None),
+                "w_in": ("tp", "fsdp", None),
+                "w_gate": ("tp", "fsdp", None),
+                "w_out": ("tp", None, "fsdp"),
+            }[name]
+        elif parent == "mamba" and name == "w_out":
+            logical = ("tp", "fsdp")
+        else:
+            logical = base[name]
+        pad = leaf.ndim - len(logical)
+        logical = (None,) * pad + tuple(logical)
+        return rules.spec(*logical)
+
+    return jax.tree_util.tree_map_with_path(spec_of, params_shape)
+
+
+def batch_specs(cfg: ModelConfig, rules: ShardingRules, batch_shape: dict) -> dict:
+    from repro.distributed import sanitize_spec
+
+    out = {}
+    for k, v in batch_shape.items():
+        if k == "positions" and len(v.shape) == 3:
+            spec = rules.spec(None, "batch", None)
+        else:
+            spec = rules.spec("batch", *([None] * (len(v.shape) - 1)))
+        out[k] = sanitize_spec(rules, spec, v.shape)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, rules: ShardingRules, cache_shape: Any) -> Any:
+    policy = _head_policy(cfg, rules)
+    kv_seq_sharded = policy != "kv_sharded"
+    h_div = cfg.ssm_state and cfg.ssm_heads % rules.tp_size == 0
+    ssm_h = "tp" if h_div else None
+
+    def spec_of(path, leaf) -> P:
+        keys = [k.key for k in path if isinstance(k, DictKey)]
+        name = keys[-1] if keys else ""
+        if name == "len":
+            return rules.spec(*([None] * leaf.ndim))
+        if name in ("k", "v") or "enc_kv" in keys:
+            # (..., B, S, KV, Dh)
+            lead = leaf.ndim - 4
+            if name in ("k", "v") and kv_seq_sharded and "enc_kv" not in keys:
+                logical = ("batch", "tp", None, None)
+            else:
+                logical = ("batch", None, "tp" if not kv_seq_sharded else None, None)
+            return rules.spec(*(None,) * lead, *logical)
+        if name == "state":  # (..., B, H, P, N)
+            lead = leaf.ndim - 4
+            return rules.spec(*(None,) * lead, "batch", ssm_h, None, None)
+        if name == "conv_x":  # (..., B, K-1, di)
+            lead = leaf.ndim - 3
+            return rules.spec(*(None,) * lead, "batch", None, "tp")
+        if name in ("conv_b", "conv_c"):
+            lead = leaf.ndim - 3
+            return rules.spec(*(None,) * lead, "batch", None, None)
+        raise KeyError(f"unmapped cache leaf {keys}")
+
+    from repro.distributed import sanitize_spec
+
+    specs = jax.tree_util.tree_map_with_path(spec_of, cache_shape)
+    return jax.tree.map(
+        lambda s, leaf: sanitize_spec(rules, s, leaf.shape),
+        specs,
+        cache_shape,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def opt_specs(param_spec_tree: Any) -> dict:
+    return {
+        "m": param_spec_tree,
+        "v": param_spec_tree,
+        "step": P(),
+    }
+
+
+def to_shardings(rules: ShardingRules, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(rules.mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,3 @@
+from repro.models.config import ModelConfig, InputShape, SHAPES, reduced, shape_applicable
+
+__all__ = ["ModelConfig", "InputShape", "SHAPES", "reduced", "shape_applicable"]

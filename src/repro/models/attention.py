@@ -1,0 +1,343 @@
+"""GQA attention: projections, RoPE/M-RoPE, chunked online-softmax core.
+
+The chunked core (``xla_chunked``) is the XLA twin of the Pallas flash kernel
+(kernels/flash_attention.py): it scans over KV blocks carrying running
+(max, denominator, accumulator), so activation memory is O(S * block_k)
+instead of O(S^2) -- required for prefill_32k.  ``xla_full`` materialises the
+full score matrix (faster to compile, fine for short seq).  On real TPU the
+Pallas kernel replaces the core via ``attention_impl="flash_pallas"``.
+
+Head-sharding policy (``head_policy``):
+  * "kv_sharded"  -- n_kv_heads % tp == 0: classic GQA tensor parallelism.
+  * "q_sharded"   -- n_heads % tp == 0 but kv heads are not divisible (MQA /
+    narrow GQA): q heads shard over tp, k/v replicate; a shard_map core gathers
+    each local q head's kv partner so the grouped reshape never crosses shards.
+  * "replicated"  -- heads not divisible (e.g. 12 heads on tp=16): attention
+    weights replicate; parallelism comes from batch + the (tp-sharded) MLP.
+
+Decode with a KV cache additionally supports **sequence-sharded caches**
+(flash-decode): the cache's sequence dim shards over tp, every shard computes
+a partial softmax over its slice, and partials combine with a log-sum-exp
+psum.  This is mandatory for the MQA/narrow-GQA archs at 32k context -- a
+replicated cache would not fit HBM (see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import active_rules, shard
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+NEG_INF = -1e30
+
+
+def head_policy(cfg: ModelConfig) -> str:
+    rules = active_rules()
+    if rules is None or rules.tp_size == 1:
+        return "kv_sharded"  # degenerate: everything divides 1
+    if rules.seq_parallel:
+        return "replicated"  # tokens shard over the model axis, heads don't
+    tp = rules.tp_size
+    if cfg.n_kv_heads % tp == 0:
+        return "kv_sharded"
+    if cfg.n_heads % tp == 0:
+        return "q_sharded"
+    return "replicated"
+
+
+def qkv_proj(x: jax.Array, p: dict, cfg: ModelConfig):
+    """x: (B, S, D) -> q (B,S,H,Dh), k/v (B,S,KV,Dh)."""
+    b, s, _ = x.shape
+    policy = head_policy(cfg)
+    q_spec = "tp" if policy in ("kv_sharded", "q_sharded") else None
+    kv_spec = "tp" if policy == "kv_sharded" else None
+    q = L.dense(x, p["wq"], p.get("bq")).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = L.dense(x, p["wk"], p.get("bk")).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = L.dense(x, p["wv"], p.get("bv")).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    # seq-parallel: q stays token-sharded; k/v replicate over seq (all-gather)
+    q = shard(q, "batch", "seq", q_spec, None)
+    k = shard(k, "batch", None, kv_spec, None)
+    v = shard(v, "batch", None, kv_spec, None)
+    return q, k, v
+
+
+def out_proj(o: jax.Array, p: dict) -> jax.Array:
+    b, s = o.shape[:2]
+    y = L.dense(o.reshape(b, s, -1), p["wo"])
+    return shard(y, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------- cores
+def full_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool, q_offset: jax.Array | int = 0
+) -> jax.Array:
+    """Materialised-scores GQA attention.  q: (B,Sq,H,Dh), k/v: (B,Skv,KV,Dh)."""
+    b, sq, h, dh = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k, preferred_element_type=jnp.float32)
+    scores = scores * (dh ** -0.5)
+    if causal:
+        qpos = q_offset + jnp.arange(sq)
+        kpos = jnp.arange(skv)
+        mask = kpos[None, :] <= qpos[:, None]  # (Sq, Skv)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", probs, v, preferred_element_type=jnp.float32)
+    return o.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_offset: jax.Array | int = 0,
+    block_k: int = 1024,
+    unroll: bool = False,
+) -> jax.Array:
+    """Online-softmax attention scanning over KV blocks (flash-style, pure XLA)."""
+    b, sq, h, dh = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    nk = -(-skv // block_k)
+    pad = nk * block_k - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nk, block_k, kvh, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nk, block_k, kvh, dh).transpose(1, 0, 2, 3, 4)
+    qg = (q * (dh ** -0.5)).reshape(b, sq, kvh, g, dh)
+    qpos = q_offset + jnp.arange(sq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        j, kj, vj = inp
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kj, preferred_element_type=jnp.float32)
+        kpos = j * block_k + jnp.arange(block_k)
+        valid = kpos < skv
+        if causal:
+            valid = valid[None, :] & (kpos[None, :] <= qpos[:, None])
+        else:
+            valid = jnp.broadcast_to(valid[None, :], (sq, block_k))
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(q.dtype), vj, preferred_element_type=jnp.float32)
+        acc_new = acc * scale[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(nk), kb, vb), unroll=nk if unroll else 1
+    )
+    o = acc / jnp.maximum(l[..., None], 1e-37)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def _plain_core(q, k, v, cfg: ModelConfig, *, causal: bool, q_offset=0) -> jax.Array:
+    if cfg.attention_impl == "xla_full" or q.shape[1] == 1:
+        return full_attention(q, k, v, causal=causal, q_offset=q_offset)
+    if cfg.attention_impl == "flash_pallas" and causal and q.shape[1] > 1:
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.flash_attention(
+            q, k, v, causal=True, block_q=cfg.attention_block_q, block_k=cfg.attention_block_k
+        )
+    return chunked_attention(
+        q, k, v, causal=causal, q_offset=q_offset,
+        block_k=cfg.attention_block_k, unroll=cfg.inner_unroll,
+    )
+
+
+def _q_sharded_core(q, k, v, cfg: ModelConfig, *, causal: bool, q_offset=0) -> jax.Array:
+    """shard_map core for MQA/narrow-GQA: q heads over tp, kv replicated.
+
+    Each shard gathers the kv partner of its local q heads (so the grouped
+    reshape happens on local arrays) and runs the plain core shard-locally.
+    """
+    rules = active_rules()
+    mesh = rules.mesh
+    tp = rules.tp_axis
+    dp = rules.dp_axes if len(rules.dp_axes) > 1 else rules.dp_axes[0]
+    g = cfg.n_heads // cfg.n_kv_heads
+    h_local = cfg.n_heads // rules.tp_size
+
+    def local_fn(q_l, k_l, v_l):
+        tp_i = jax.lax.axis_index(tp)
+        heads = tp_i * h_local + jnp.arange(h_local)
+        kv_idx = heads // g  # kv partner of each local q head
+        k_g = jnp.take(k_l, kv_idx, axis=2)  # (B,S,h_local,D)
+        v_g = jnp.take(v_l, kv_idx, axis=2)
+        return _plain_core(q_l, k_g, v_g, cfg, causal=causal, q_offset=q_offset)
+
+    return jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(dp, None, tp, None), P(dp, None, None, None), P(dp, None, None, None)),
+        out_specs=P(dp, None, tp, None),
+        check_vma=False,
+    )(q, k, v)
+
+
+def attention_core(q, k, v, cfg: ModelConfig, *, causal: bool, q_offset=0) -> jax.Array:
+    if head_policy(cfg) == "q_sharded" and q.shape[1] > 1:
+        return _q_sharded_core(q, k, v, cfg, causal=causal, q_offset=q_offset)
+    return _plain_core(q, k, v, cfg, causal=causal, q_offset=q_offset)
+
+
+# ---------------------------------------------------------------- flash-decode
+def decode_seq_sharded(
+    q: jax.Array,  # (B, 1, H, Dh) replicated over tp
+    cache_k: jax.Array,  # (B, S_max, KVH, Dh) seq-sharded over tp
+    cache_v: jax.Array,
+    k_new: jax.Array,  # (B, 1, KVH, Dh)
+    v_new: jax.Array,
+    idx: jax.Array,  # () int32 current length
+    cfg: ModelConfig,
+):
+    """One decode step against a sequence-sharded KV cache (flash-decode).
+
+    The owning shard writes the new K/V at global position ``idx``; every
+    shard computes a partial softmax over its sequence slice; partials merge
+    with the numerically-stable log-sum-exp combine (pmax + two psums over a
+    few KiB -- negligible collective volume).
+    Returns (o (B,1,H,Dh) replicated over tp, new_cache_k, new_cache_v).
+    """
+    rules = active_rules()
+    mesh = rules.mesh
+    tp = rules.tp_axis
+    dp = rules.dp_axes if len(rules.dp_axes) > 1 else rules.dp_axes[0]
+    kvh = cfg.n_kv_heads
+    g = cfg.n_heads // kvh
+    scale = cfg.head_dim**-0.5
+
+    def local_fn(q_l, ck, cv, k1, v1, idx_l):
+        idx_l = idx_l[0]
+        tp_i = jax.lax.axis_index(tp)
+        s_l = ck.shape[1]
+        local_idx = idx_l - tp_i * s_l
+        owned = (local_idx >= 0) & (local_idx < s_l)
+        li = jnp.clip(local_idx, 0, s_l - 1)
+        cur_k = jax.lax.dynamic_slice(ck, (0, li, 0, 0), (ck.shape[0], 1, kvh, ck.shape[3]))
+        cur_v = jax.lax.dynamic_slice(cv, (0, li, 0, 0), (cv.shape[0], 1, kvh, cv.shape[3]))
+        ck = jax.lax.dynamic_update_slice(
+            ck, jnp.where(owned, k1.astype(ck.dtype), cur_k), (0, li, 0, 0)
+        )
+        cv = jax.lax.dynamic_update_slice(
+            cv, jnp.where(owned, v1.astype(cv.dtype), cur_v), (0, li, 0, 0)
+        )
+        b = q_l.shape[0]
+        qg = (q_l[:, 0] * scale).reshape(b, kvh, g, cfg.head_dim)
+        s = jnp.einsum(
+            "bkgd,bskd->bkgs", qg.astype(jnp.float32), ck.astype(jnp.float32)
+        )
+        kpos = tp_i * s_l + jnp.arange(s_l)
+        valid = kpos <= idx_l  # current token included
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        m_loc = jnp.max(s, axis=-1)  # (b,kvh,g)
+        m_glob = jax.lax.pmax(m_loc, tp)
+        p = jnp.exp(s - m_glob[..., None])
+        l_loc = jnp.sum(p, axis=-1)
+        o_loc = jnp.einsum("bkgs,bskd->bkgd", p, cv.astype(jnp.float32))
+        l_glob = jax.lax.psum(l_loc, tp)
+        o_glob = jax.lax.psum(o_loc, tp) / jnp.maximum(l_glob[..., None], 1e-37)
+        o = o_glob.reshape(b, 1, cfg.n_heads, cfg.head_dim).astype(q_l.dtype)
+        return o, ck, cv
+
+    idx_arr = jnp.reshape(idx, (1,))
+    return jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(
+            P(dp, None, None, None),
+            P(dp, tp, None, None),
+            P(dp, tp, None, None),
+            P(dp, None, None, None),
+            P(dp, None, None, None),
+            P(),
+        ),
+        out_specs=(P(dp, None, None, None), P(dp, tp, None, None), P(dp, tp, None, None)),
+        check_vma=False,
+    )(q, cache_k, cache_v, k_new, v_new, idx_arr)
+
+
+# ---------------------------------------------------------------- blocks
+def self_attention(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    causal: bool = True,
+    cache: dict | None = None,
+    use_rope: bool = True,
+):
+    """Self-attention with optional KV cache update (decode).
+
+    cache: {"k": (B, S_max, KV, Dh), "v": ..., "len": ()} or None.
+    Returns (out (B,S,D-heads concat BEFORE out-proj), new_cache).
+    """
+    q, k, v = qkv_proj(x, p, cfg)
+    if use_rope:
+        if cfg.mrope and positions.ndim == 3:
+            q = L.apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = L.apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if cache is not None:
+        idx = cache["len"]
+        if k.shape[1] == 1 and head_policy(cfg) != "kv_sharded":
+            # flash-decode against a sequence-sharded cache (see module doc)
+            o, ck, cv = decode_seq_sharded(q, cache["k"], cache["v"], k, v, idx, cfg)
+            new_cache = {"k": ck, "v": cv, "len": idx + 1}
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+            new_cache = {"k": ck, "v": cv, "len": idx + k.shape[1]}
+            # mask beyond len via causal offset: q_offset = idx for decode
+            o = attention_core(
+                q, ck.astype(q.dtype), cv.astype(q.dtype), cfg, causal=True, q_offset=idx
+            )
+    else:
+        o = attention_core(q, k, v, cfg, causal=causal, q_offset=0)
+    return out_proj(o, p), new_cache
+
+
+def cross_attention(x: jax.Array, p: dict, cfg: ModelConfig, enc_kv: tuple[jax.Array, jax.Array]):
+    """Whisper-style cross attention; enc_kv precomputed (B, S_enc, KV, Dh)."""
+    b, s, _ = x.shape
+    policy = head_policy(cfg)
+    h_spec = "tp" if policy in ("kv_sharded", "q_sharded") else None
+    kv_spec = "tp" if policy == "kv_sharded" else None
+    q = L.dense(x, p["wq"], p.get("bq")).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    q = shard(q, "batch", "seq", h_spec, None)
+    k, v = enc_kv
+    k = shard(k, "batch", None, kv_spec, None)
+    v = shard(v, "batch", None, kv_spec, None)
+    o = attention_core(q, k.astype(q.dtype), v.astype(q.dtype), cfg, causal=False)
+    return out_proj(o, p)
+
+
+def encoder_kv(enc_out: jax.Array, p: dict, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output."""
+    b, s, _ = enc_out.shape
+    policy = head_policy(cfg)
+    kv_spec = "tp" if policy == "kv_sharded" else None
+    k = L.dense(enc_out, p["wk"], p.get("bk")).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = L.dense(enc_out, p["wv"], p.get("bv")).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    return shard(k, "batch", None, kv_spec, None), shard(v, "batch", None, kv_spec, None)

@@ -1,0 +1,96 @@
+"""Decode-time caches (KV / SSM-state) with shape+sharding factories.
+
+The factories produce either concrete zero-filled caches (smoke tests,
+serving examples) or ``jax.ShapeDtypeStruct`` stand-ins (dry-run lowering).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import ShardingRules
+from repro.models.config import ModelConfig
+
+CACHE_DTYPE = jnp.bfloat16
+
+
+def _kv_heads_spec(cfg: ModelConfig, rules: ShardingRules | None):
+    if rules is None:
+        return None
+    return "tp" if cfg.n_kv_heads % rules.tp_size == 0 else None
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Pytree of (shape, dtype) describing the decode cache."""
+    hd, kvh = cfg.head_dim, cfg.n_kv_heads
+
+    def kv(layers_axis: int | None, b: int = batch, s: int = max_len):
+        base = (b, s, kvh, hd)
+        shape = (layers_axis, *base) if layers_axis else base
+        len_shape = (layers_axis,) if layers_axis else ()
+        return {"k": (shape, CACHE_DTYPE), "v": (shape, CACHE_DTYPE), "len": (len_shape, jnp.int32)}
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        return {"layers": kv(cfg.n_layers), "len": ((), jnp.int32)}
+    def ssm_caches(*lead):
+        k1 = cfg.ssm_conv - 1
+        return {
+            "conv_x": ((*lead, batch, k1, cfg.d_inner), jnp.float32),
+            "conv_b": ((*lead, batch, k1, cfg.ssm_state), jnp.float32),
+            "conv_c": ((*lead, batch, k1, cfg.ssm_state), jnp.float32),
+            "state": (
+                (*lead, batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+                jnp.float32,
+            ),
+        }
+
+    if cfg.family == "ssm":
+        return {"layers": ssm_caches(cfg.n_layers), "len": ((), jnp.int32)}
+    if cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        return {
+            "mamba": ssm_caches(groups, cfg.attn_every),
+            "attn": {
+                "k": ((groups, batch, max_len, kvh, hd), CACHE_DTYPE),
+                "v": ((groups, batch, max_len, kvh, hd), CACHE_DTYPE),
+                "len": ((groups,), jnp.int32),
+            },
+            "len": ((), jnp.int32),
+        }
+    if cfg.family == "audio":
+        enc_s = cfg.encoder_seq or 1500
+        return {
+            "layers": kv(cfg.n_layers),
+            "enc_kv": (
+                (cfg.n_layers, 2, batch, enc_s, kvh, hd),  # packed (k, v)
+                CACHE_DTYPE,
+            ),
+            "len": ((), jnp.int32),
+        }
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, concrete: bool = True):
+    """Concrete zero cache (concrete=True) or ShapeDtypeStructs (False)."""
+    shapes = cache_shapes(cfg, batch, max_len)
+
+    def leaf(x):
+        shape, dtype = x
+        if concrete:
+            return jnp.zeros(shape, dtype)
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    is_leaf = lambda n: isinstance(n, tuple) and len(n) == 2 and isinstance(n[0], tuple)
+    out = jax.tree.map(leaf, shapes, is_leaf=is_leaf)
+    # audio: unpack packed enc_kv into (k, v) tuple per layer stack
+    if cfg.family == "audio":
+        ekv = out["enc_kv"]
+        if concrete:
+            out["enc_kv"] = (ekv[:, 0], ekv[:, 1])
+        else:
+            s = ekv.shape
+            half = jax.ShapeDtypeStruct((s[0], *s[2:]), ekv.dtype)
+            out["enc_kv"] = (half, half)
+    return out

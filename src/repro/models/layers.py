@@ -1,0 +1,131 @@
+"""Shared neural-net layers (pure functions over param pytrees).
+
+Conventions:
+  * params are float32 pytrees; matmuls run in bfloat16 with fp32 accumulation
+    (``preferred_element_type``), norms run in fp32;
+  * activations carry logical sharding annotations via ``distributed.shard``;
+  * every function is shape-polymorphic over batch/seq so the same code path
+    serves train (B,S), prefill (B,S) and decode (B,1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import shard
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def cast(x):
+    return x.astype(COMPUTE_DTYPE)
+
+
+# ------------------------------------------------------------------ norms
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ dense
+def dense(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", cast(x), cast(w), preferred_element_type=COMPUTE_DTYPE)
+    if b is not None:
+        y = y + cast(b)
+    return y
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), dtype=jnp.float32)  # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, d/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,
+    theta: float,
+    sections: tuple[int, int, int],
+) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): positions (3, B, S) for (t, h, w) streams.
+
+    The rotary half-dim is split into three sections; each section rotates by
+    its own position stream.  Text tokens have t==h==w so M-RoPE degenerates
+    to RoPE there.
+    """
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), dtype=jnp.float32)  # (d/2,)
+    # section id per frequency index
+    sec = np.concatenate([np.full(s, i) for i, s in enumerate(sections)])
+    assert sec.shape[0] == d // 2, (sec.shape, d)
+    pos_per_freq = jnp.take(positions.astype(jnp.float32), jnp.asarray(sec), axis=0)
+    # pos_per_freq: (d/2, B, S) -> (B, S, d/2)
+    pos_per_freq = jnp.moveaxis(pos_per_freq, 0, -1)
+    angles = pos_per_freq * freqs
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d_model: int) -> np.ndarray:
+    """Whisper-style fixed sinusoidal embeddings, (seq, d_model) float32."""
+    pos = np.arange(seq)[:, None]
+    inv = np.exp(-np.log(10000.0) * np.arange(d_model // 2) / (d_model // 2 - 1))
+    ang = pos * inv[None, :]
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=1).astype(np.float32)
+
+
+# ------------------------------------------------------------------ MLP
+def mlp_block(x: jax.Array, p: dict, kind: str) -> jax.Array:
+    """Gated (swiglu) or plain gelu MLP.  Output needs a tp psum via GSPMD."""
+    if kind == "swiglu":
+        h = dense(x, p["w_in"]) * jax.nn.silu(dense(x, p["w_gate"]))
+    else:
+        h = jax.nn.gelu(dense(x, p["w_in"], p.get("b_in")), approximate=True)
+    h = shard(h, "batch", "seq", "tp")
+    y = dense(h, p["w_out"], p.get("b_out"))
+    return shard(y, "batch", "seq", None)
+
+
+# ------------------------------------------------------------------ embed / head
+def embed_tokens(tokens: jax.Array, w_embed: jax.Array) -> jax.Array:
+    y = jnp.take(cast(w_embed), tokens, axis=0)
+    return shard(y, "batch", "seq", None)
+
+
+def lm_head(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B, S, D) -> logits (B, S, V) sharded over tp on the vocab dim."""
+    logits = jnp.einsum("bsd,dv->bsv", cast(x), cast(w), preferred_element_type=jnp.float32)
+    return shard(logits, "batch", "seq", "tp")
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE over all positions; logits fp32 (B, S, V), labels (B, S)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    target = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - target)

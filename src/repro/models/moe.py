@@ -1,0 +1,117 @@
+"""Expert-parallel Mixture-of-Experts block (top-k routing, capacity-based).
+
+Design (see DESIGN.md §5): activations entering the block are replicated over
+the "model" (tp) mesh axis (the attention output all-reduce already did that),
+and experts are sharded over it.  Each tp shard therefore *locally* selects the
+tokens routed to its resident experts -- dispatch needs **no** communication --
+runs its expert GEMMs, scatters results back to token order, and a single
+psum over tp combines the partial outputs (the same collective volume as a
+dense TP MLP).  Implemented with shard_map so the collective schedule is
+explicit and parseable by the roofline analyzer.
+
+Capacity: each expert processes at most C = ceil(tokens * topk / E * cf)
+tokens per shard-step; overflow tokens are dropped (standard Switch-style).
+An auxiliary load-balancing loss is returned for training.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import ShardingRules, active_rules
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def _local_moe(
+    x: jax.Array,  # (Bl, S, D) tokens local to this dp shard, replicated over tp
+    w_router: jax.Array,  # (D, E) replicated
+    w_in: jax.Array,  # (El, D, F) local experts
+    w_gate: jax.Array,  # (El, D, F)
+    w_out: jax.Array,  # (El, F, D)
+    *,
+    cfg: ModelConfig,
+    tp_axis: str,
+):
+    bl, s, d = x.shape
+    e_local = w_in.shape[0]
+    n_exp = cfg.moe_experts
+    k = cfg.moe_top_k
+    tp_index = jax.lax.axis_index(tp_axis)
+
+    t = bl * s
+    xf = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", L.cast(xf), L.cast(w_router), preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)  # (T, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # ---- load-balance aux loss (computed on full routing, replicated) ----
+    density = jnp.mean(jax.nn.one_hot(top_i[:, 0], n_exp, dtype=jnp.float32), axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = n_exp * jnp.sum(density * mean_prob)
+
+    # ---- local dispatch: entries routed to experts resident on this shard ----
+    ent_expert = top_i.reshape(-1)  # (T*k,)
+    ent_weight = top_p.reshape(-1)
+    ent_token = jnp.repeat(jnp.arange(t), k)
+    is_local = (ent_expert // e_local) == tp_index
+    local_e = ent_expert % e_local
+
+    capacity = int(math.ceil(t * k / n_exp * cfg.capacity_factor))
+    capacity = max(capacity, 8)
+    # slot of each entry inside its expert's buffer
+    onehot = (local_e[:, None] == jnp.arange(e_local)[None, :]) & is_local[:, None]
+    slot = (jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1)
+    slot = jnp.take_along_axis(slot, local_e[:, None], axis=1)[:, 0]
+    keep = is_local & (slot < capacity)
+    slot = jnp.where(keep, slot, capacity)  # overflow -> scratch slot
+
+    ent_x = jnp.take(xf, ent_token, axis=0).astype(L.COMPUTE_DTYPE)  # (T*k, d)
+    buf = jnp.zeros((e_local, capacity + 1, d), dtype=L.COMPUTE_DTYPE)
+    buf = buf.at[local_e, slot].add(jnp.where(keep[:, None], ent_x, 0))
+
+    # ---- expert GEMMs (swiglu) ----
+    h = jnp.einsum("ecd,edf->ecf", buf, L.cast(w_in), preferred_element_type=L.COMPUTE_DTYPE)
+    g = jnp.einsum("ecd,edf->ecf", buf, L.cast(w_gate), preferred_element_type=L.COMPUTE_DTYPE)
+    h = h * jax.nn.silu(g)
+    out = jnp.einsum("ecf,efd->ecd", h, L.cast(w_out), preferred_element_type=L.COMPUTE_DTYPE)
+
+    # ---- combine: gather entries, weight, sum per token, psum over tp ----
+    # psum payload in bf16: halves the EP-combine collective volume (§Perf);
+    # per-token partial sums are <= top_k bf16 addends -- loss-neutral.
+    ent_out = out[local_e, slot] * jnp.where(keep, ent_weight, 0.0)[:, None].astype(L.COMPUTE_DTYPE)
+    y = jax.ops.segment_sum(ent_out.astype(jnp.float32), ent_token, num_segments=t)
+    y = jax.lax.psum(y.astype(L.COMPUTE_DTYPE), tp_axis)
+    aux = jax.lax.pmean(aux, tp_axis)
+    return y.reshape(bl, s, d).astype(x.dtype), aux
+
+
+def moe_block(x: jax.Array, p: dict, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,D), aux_loss scalar)."""
+    rules = active_rules()
+    if rules is None:
+        raise RuntimeError("moe_block requires active sharding rules (use_rules)")
+    mesh = rules.mesh
+    dp = rules.dp_axes if len(rules.dp_axes) > 1 else rules.dp_axes[0]
+    tp = rules.tp_axis
+    fn = functools.partial(_local_moe, cfg=cfg, tp_axis=tp)
+    y, aux = jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(
+            P(dp, None, None),  # x: batch over dp, replicated over tp
+            P(None, None),  # router replicated
+            P(tp, None, None),  # experts over tp
+            P(tp, None, None),
+            P(tp, None, None),
+        ),
+        out_specs=(P(dp, None, None), P()),
+        check_vma=False,
+    )(x, p["w_router"], p["w_in"], p["w_gate"], p["w_out"])
+    return y, aux

@@ -1,0 +1,172 @@
+"""Mamba2 block: chunked State-Space Duality (SSD) + causal depthwise conv.
+
+Prefill/train path: the SSD algorithm (Dao & Gu 2024) in 128-token chunks --
+intra-chunk quadratic term (masked C B^T) plus an inter-chunk state recurrence
+carried by ``lax.scan``.  This is the XLA twin of kernels/ssd_scan.py.
+Decode path: O(1) per token -- conv ring buffer + state update.
+
+Sharding: the inner dimension (heads x headdim) is tensor-parallel over "tp";
+B/C projections (G*N, with G=1 group) are small and replicated; out_proj
+reduces over tp (GSPMD inserts the all-reduce).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import shard
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def depthwise_conv1d(x: jax.Array, w: jax.Array, b: jax.Array, state: jax.Array | None = None):
+    """Causal depthwise conv along seq.  x: (B,S,C); w: (K,C); b: (C,).
+
+    With ``state`` (B, K-1, C) the last K-1 inputs of the previous step are
+    prepended (decode).  Returns (y, new_state).
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1) :, :] if k > 1 else jnp.zeros_like(pad)
+    return y + b, new_state
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """log-decay matrix: out[..., i, j] = sum_{k=j+1..i} a[..., k], -inf for j>i."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (..., i, j) = cs_i - cs_j
+    mask = jnp.arange(q)[:, None] >= jnp.arange(q)[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    xbar: jax.Array,  # (B, S, H, P) dt-scaled inputs
+    log_da: jax.Array,  # (B, S, H) log of per-step decay (dt * A, A<0)
+    bmat: jax.Array,  # (B, S, N) input projection (G=1)
+    cmat: jax.Array,  # (B, S, N) output projection
+    chunk: int,
+    state0: jax.Array | None = None,  # (B, H, P, N)
+    unroll: bool = False,
+):
+    """Chunked SSD scan.  Returns (y (B,S,H,P), final_state)."""
+    bsz, s, h, p = xbar.shape
+    n = bmat.shape[-1]
+    q = chunk
+    pad = (-s) % q
+    if pad:
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_da = jnp.pad(log_da, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // q
+    xc = xbar.reshape(bsz, nc, q, h, p).transpose(1, 0, 2, 3, 4)  # (nc,B,q,H,P)
+    ac = log_da.reshape(bsz, nc, q, h).transpose(1, 0, 2, 3)  # (nc,B,q,H)
+    bc = bmat.reshape(bsz, nc, q, n).transpose(1, 0, 2, 3)  # (nc,B,q,N)
+    cc = cmat.reshape(bsz, nc, q, n).transpose(1, 0, 2, 3)
+
+    if state0 is None:
+        state0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        xj, aj, bj, cj = inp  # (B,q,H,P), (B,q,H), (B,q,N), (B,q,N)
+        a_cum = jnp.cumsum(aj, axis=1)  # (B,q,H) decay since chunk start
+        lmat = jnp.exp(_segsum(aj.transpose(0, 2, 1)))  # (B,H,q,q)
+        scores = jnp.einsum("bin,bjn->bij", cj, bj, preferred_element_type=jnp.float32)
+        # intra-chunk: y_i = sum_{j<=i} C_i.B_j * L[i,j] * xbar_j
+        w_ij = scores[:, None] * lmat  # (B,H,q,q)
+        y_intra = jnp.einsum("bhij,bjhp->bihp", w_ij.astype(xj.dtype), xj,
+                             preferred_element_type=jnp.float32)
+        # inter-chunk: contribution of the incoming state
+        decay_in = jnp.exp(a_cum)  # (B,q,H)
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", cj.astype(jnp.float32), state, decay_in)
+        # state update: state' = decay_total*state + sum_j decay_{last-j} B_j xbar_j
+        a_last = a_cum[:, -1:, :]  # (B,1,H)
+        decay_out = jnp.exp(a_last - a_cum)  # (B,q,H)
+        state_new = state * jnp.exp(a_last)[:, 0, :, None, None] + jnp.einsum(
+            "bjn,bjhp,bjh->bhpn", bj.astype(jnp.float32), xj.astype(jnp.float32), decay_out
+        )
+        return state_new, (y_intra + y_inter).astype(xbar.dtype)
+
+    state, ys = jax.lax.scan(step, state0, (xc, ac, bc, cc), unroll=nc if unroll else 1)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, nc * q, h, p)
+    return y[:, :s] if pad else y, state
+
+
+def mamba_block(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    cache: dict | None = None,
+):
+    """Mamba2 block.  x: (B, S, D).  cache: {"conv": (B,K-1,C), "state": (B,H,P,N)}.
+
+    Returns (y (B,S,D), new_cache).
+    """
+    bsz, s, _ = x.shape
+    h, pd, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    # split projections (separate weights per stream -> clean TP sharding:
+    # z/x shard the inner dim over tp, B/C/dt are small and replicated)
+    z = shard(L.dense(x, p["w_z"]), "batch", None, "tp")
+    xs = shard(L.dense(x, p["w_x"]), "batch", None, "tp")
+    bmat = L.dense(x, p["w_b"])
+    cmat = L.dense(x, p["w_c"])
+    dt = L.dense(x, p["w_dt"])
+
+    # causal depthwise convs, one per stream
+    cs = cache if cache is not None else {}
+    xs, new_conv_x = depthwise_conv1d(xs, L.cast(p["w_conv_x"]), L.cast(p["b_conv_x"]), cs.get("conv_x"))
+    bmat, new_conv_b = depthwise_conv1d(bmat, L.cast(p["w_conv_b"]), L.cast(p["b_conv_b"]), cs.get("conv_b"))
+    cmat, new_conv_c = depthwise_conv1d(cmat, L.cast(p["w_conv_c"]), L.cast(p["b_conv_c"]), cs.get("conv_c"))
+    xs = jax.nn.silu(xs)
+    xs = shard(xs, "batch", None, "tp")
+    bmat = jax.nn.silu(bmat)
+    cmat = jax.nn.silu(cmat)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["a_log"])  # (H,) negative
+    log_da = dt * a  # (B,S,H)
+    xhp = xs.reshape(bsz, s, h, pd)
+    # keep xbar in compute dtype (bf16) and pin its layout: an f32 promotion
+    # here doubles the SSD scan's bytes and invites GSPMD re-layouts (§Perf)
+    xbar = xhp * dt[..., None].astype(xhp.dtype)
+    xbar = shard(xbar, "batch", None, "tp", None)
+
+    state0 = cache["state"] if cache is not None else None
+    if s == 1 and cache is not None:
+        # decode: O(1) recurrence
+        da = jnp.exp(log_da[:, 0])  # (B,H)
+        upd = jnp.einsum("bn,bhp->bhpn", bmat[:, 0].astype(jnp.float32), xbar[:, 0].astype(jnp.float32))
+        state = state0 * da[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, cmat[:, 0].astype(jnp.float32))[:, None]
+        y = y.reshape(bsz, 1, h, pd).astype(x.dtype)
+        new_state = state
+    else:
+        y, new_state = ssd_chunked(
+            xbar, log_da, bmat, cmat, cfg.ssm_chunk, state0, unroll=cfg.inner_unroll
+        )
+        y = shard(y, "batch", None, "tp", None)
+
+    y = y + xhp * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, cfg.d_inner)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    y = shard(y, "batch", None, "tp")
+    out = L.dense(y, p["w_out"])
+    out = shard(out, "batch", None, None)
+    new_cache = (
+        {
+            "conv_x": new_conv_x.astype(jnp.float32),
+            "conv_b": new_conv_b.astype(jnp.float32),
+            "conv_c": new_conv_c.astype(jnp.float32),
+            "state": new_state,
+        }
+        if cache is not None
+        else None
+    )
+    return out, new_cache

@@ -1,0 +1,415 @@
+"""Model assembly for all six architecture families.
+
+One functional implementation covers: dense decoder-only (granite/qwen2/
+internlm2), MoE decoder-only (olmoe/qwen3-moe), SSM (mamba2), hybrid
+SSD+shared-attention (zamba2), VLM backbone with M-RoPE (qwen2-vl), and
+encoder-decoder audio backbone (whisper).  Layer stacks are scanned
+(``lax.scan`` over stacked params) so the HLO stays compact for 50-90-layer
+models; remat policy is configurable per config.
+
+Entry points:
+  init_params(cfg, key)                 -> param pytree (fp32)
+  forward(params, cfg, batch, cache)    -> (logits, aux, new_cache)
+  loss_fn(params, cfg, batch)           -> scalar loss
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import active_rules, shard
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+
+Params = dict[str, Any]
+
+
+# =================================================================== init
+def _init_dense(key, shape, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def _init_attn(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    p = {
+        "wq": _init_dense(ks[0], (d, cfg.n_heads * hd)),
+        "wk": _init_dense(ks[1], (d, cfg.n_kv_heads * hd)),
+        "wv": _init_dense(ks[2], (d, cfg.n_kv_heads * hd)),
+        "wo": _init_dense(ks[3], (cfg.n_heads * hd, d), scale=1.0 / np.sqrt(cfg.n_heads * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+    return p
+
+
+def _init_mlp(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    p = {"w_in": _init_dense(ks[0], (d, f)), "w_out": _init_dense(ks[1], (f, d))}
+    if cfg.mlp == "swiglu":
+        p["w_gate"] = _init_dense(ks[2], (d, f))
+    return p
+
+
+def _init_moe(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 4)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    return {
+        "w_router": _init_dense(ks[0], (d, e)),
+        "w_in": _init_dense(ks[1], (e, d, f), scale=1.0 / np.sqrt(d)),
+        "w_gate": _init_dense(ks[2], (e, d, f), scale=1.0 / np.sqrt(d)),
+        "w_out": _init_dense(ks[3], (e, f, d), scale=1.0 / np.sqrt(f)),
+    }
+
+
+def _init_mamba(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 8)
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    return {
+        "w_z": _init_dense(ks[0], (d, di)),
+        "w_x": _init_dense(ks[1], (d, di)),
+        "w_b": _init_dense(ks[2], (d, n)),
+        "w_c": _init_dense(ks[3], (d, n)),
+        "w_dt": _init_dense(ks[4], (d, h)),
+        "w_conv_x": _init_dense(ks[5], (cfg.ssm_conv, di), scale=0.5),
+        "b_conv_x": jnp.zeros((di,), jnp.float32),
+        "w_conv_b": _init_dense(ks[6], (cfg.ssm_conv, n), scale=0.5),
+        "b_conv_b": jnp.zeros((n,), jnp.float32),
+        "w_conv_c": _init_dense(ks[7], (cfg.ssm_conv, n), scale=0.5),
+        "b_conv_c": jnp.zeros((n,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01, jnp.float32))),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": jnp.ones((di,), jnp.float32),
+        "w_out": _init_dense(ks[3], (di, d)),
+    }
+
+
+def _init_decoder_layer(cfg: ModelConfig, key, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Params = {"ln1": jnp.ones((d,), jnp.float32), "ln2": jnp.ones((d,), jnp.float32)}
+    p["attn"] = _init_attn(cfg, ks[0])
+    if cross:
+        p["lnx"] = jnp.ones((d,), jnp.float32)
+        p["xattn"] = _init_attn(cfg, ks[1])
+    if cfg.family == "moe":
+        p["moe"] = _init_moe(cfg, ks[2])
+    else:
+        p["mlp"] = _init_mlp(cfg, ks[2])
+    return p
+
+
+def _init_mamba_layer(cfg: ModelConfig, key) -> Params:
+    return {"ln": jnp.ones((cfg.d_model,), jnp.float32), "mamba": _init_mamba(cfg, key)}
+
+
+def _stack_init(fn, cfg, key, n):
+    return jax.vmap(lambda k: fn(cfg, k))(jax.random.split(key, n))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    k_emb, k_layers, k_head, k_extra = jax.random.split(key, 4)
+    d, v = cfg.d_model, cfg.vocab
+    params: Params = {
+        "embed": _init_dense(k_emb, (v, d), scale=0.02),
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _init_dense(k_head, (d, v))
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        params["layers"] = _stack_init(_init_decoder_layer, cfg, k_layers, cfg.n_layers)
+    elif cfg.family == "ssm":
+        params["layers"] = _stack_init(_init_mamba_layer, cfg, k_layers, cfg.n_layers)
+    elif cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        def init_group(c, k):
+            return jax.vmap(lambda kk: _init_mamba_layer(c, kk))(
+                jax.random.split(k, cfg.attn_every)
+            )
+        params["layers"] = jax.vmap(lambda k: init_group(cfg, k))(
+            jax.random.split(k_layers, groups)
+        )
+        params["shared"] = _init_decoder_layer(cfg, k_extra)
+    elif cfg.family == "audio":
+        params["enc_layers"] = _stack_init(
+            functools.partial(_init_decoder_layer, cross=False), cfg, k_extra, cfg.n_encoder_layers
+        )
+        params["layers"] = _stack_init(
+            functools.partial(_init_decoder_layer, cross=True), cfg, k_layers, cfg.n_layers
+        )
+        params["enc_norm"] = jnp.ones((d,), jnp.float32)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# =================================================================== blocks
+def _decoder_block(cfg: ModelConfig, x, p, positions, cache, enc_kv=None):
+    """Pre-norm transformer block (self-attn [+cross-attn] + MLP/MoE)."""
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    attn_out, new_cache = A.self_attention(
+        h, p["attn"], cfg, positions=positions, cache=cache,
+        use_rope=(cfg.family != "audio"),
+    )
+    x = x + attn_out
+    if enc_kv is not None:
+        h = L.rms_norm(x, p["lnx"], cfg.norm_eps)
+        x = x + A.cross_attention(h, p["xattn"], cfg, enc_kv)
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        mlp_out, aux = M.moe_block(h, p["moe"], cfg)
+    else:
+        mlp_out = L.mlp_block(h, p["mlp"], cfg.mlp)
+    return x + mlp_out, aux, new_cache
+
+
+def _mamba_layer(cfg: ModelConfig, x, p, cache):
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    out, new_cache = S.mamba_block(h, p["mamba"], cfg, cache)
+    return x + out, new_cache
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# =================================================================== stacks
+def _scan_decoder(cfg, x, layers, positions, caches, enc_kv=None):
+    """Scan a stacked decoder; caches is a stacked pytree or None."""
+
+    def body(carry, inp):
+        x, aux = carry
+        p, c = inp
+        x, a, new_c = _decoder_block(cfg, x, p, positions, c, enc_kv)
+        return (x, aux + a), new_c
+
+    body = _maybe_remat(body, cfg)
+    if cfg.scan_layers:
+        (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), (layers, caches))
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        new_list = []
+        n = jax.tree.leaves(layers)[0].shape[0]
+        for i in range(n):
+            p = jax.tree.map(lambda a: a[i], layers)
+            c = jax.tree.map(lambda a: a[i], caches) if caches is not None else None
+            (x, aux), nc = body((x, aux), (p, c))
+            new_list.append(nc)
+        new_caches = (
+            jax.tree.map(lambda *xs: jnp.stack(xs), *new_list) if new_list[0] is not None else None
+        )
+    return x, aux, new_caches
+
+
+def _scan_mamba(cfg, x, layers, caches):
+    def body(x, inp):
+        p, c = inp
+        x, new_c = _mamba_layer(cfg, x, p, c)
+        return x, new_c
+
+    body = _maybe_remat(body, cfg)
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(body, x, (layers, caches))
+        return x, new_caches
+    n = jax.tree.leaves(layers)[0].shape[0]
+    new_list = []
+    for i in range(n):
+        p = jax.tree.map(lambda a: a[i], layers)
+        c = jax.tree.map(lambda a: a[i], caches) if caches is not None else None
+        x, nc = body(x, (p, c))
+        new_list.append(nc)
+    new_caches = (
+        jax.tree.map(lambda *xs: jnp.stack(xs), *new_list) if new_list and new_list[0] is not None else None
+    )
+    return x, new_caches
+
+
+def _hybrid_stack(cfg, x, params, positions, caches):
+    """zamba2: groups of `attn_every` mamba layers + one shared attn block."""
+
+    shared = params["shared"]
+
+    def group_body(carry, inp):
+        x, aux = carry
+        mamba_params, mamba_caches, attn_cache = inp
+        x, new_mc = _scan_mamba(cfg, x, mamba_params, mamba_caches)
+        x, a, new_ac = _decoder_block(cfg, x, shared, positions, attn_cache)
+        return (x, aux + a), (new_mc, new_ac)
+
+    mamba_caches = caches["mamba"] if caches else None
+    attn_caches = caches["attn"] if caches else None
+    if cfg.scan_layers:
+        (x, aux), (new_mc, new_ac) = jax.lax.scan(
+            group_body, (x, jnp.zeros((), jnp.float32)), (params["layers"], mamba_caches, attn_caches)
+        )
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        n = jax.tree.leaves(params["layers"])[0].shape[0]
+        mcs, acs = [], []
+        for i in range(n):
+            mp = jax.tree.map(lambda a: a[i], params["layers"])
+            mc = jax.tree.map(lambda a: a[i], mamba_caches) if mamba_caches is not None else None
+            ac = jax.tree.map(lambda a: a[i], attn_caches) if attn_caches is not None else None
+            (x, aux), (nmc, nac) = group_body((x, aux), (mp, mc, ac))
+            mcs.append(nmc)
+            acs.append(nac)
+        stack = lambda xs: jax.tree.map(lambda *ys: jnp.stack(ys), *xs) if xs and xs[0] is not None else None
+        new_mc, new_ac = stack(mcs), stack(acs)
+    new_caches = {"mamba": new_mc, "attn": new_ac} if caches else None
+    return x, aux, new_caches
+
+
+# =================================================================== forward
+def _sinusoid_at(positions: jax.Array, d_model: int) -> jax.Array:
+    """On-the-fly sinusoidal embedding for arbitrary (B,S) positions."""
+    half = d_model // 2
+    inv = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch, cache):
+    """Token (+vision) embedding and position handling."""
+    x = L.embed_tokens(batch["tokens"], params["embed"])
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        vis = L.cast(batch["vision_embeds"])
+        vis = shard(vis, "batch", None, None)
+        x = jnp.concatenate([vis, x], axis=1)
+    b, s = x.shape[:2]
+    if "positions" in batch:
+        positions = batch["positions"]
+    elif cache is not None:
+        pos0 = cache["len"]
+        positions = (pos0 + jnp.arange(s))[None, :].repeat(b, 0)
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[None], (3, b, s))
+    else:
+        positions = jnp.arange(s)[None, :].repeat(b, 0)
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[None], (3, b, s))
+    if cfg.family == "audio":
+        # whisper-style absolute positions on the decoder stream
+        x = x + _sinusoid_at(positions, cfg.d_model).astype(x.dtype)
+    return x, positions
+
+
+def _encode_audio(params, cfg: ModelConfig, frames):
+    """Whisper encoder over precomputed (stub) conv-frontend frames."""
+    x = L.cast(frames) + jnp.asarray(
+        L.sinusoidal_positions(frames.shape[1], cfg.d_model), L.COMPUTE_DTYPE
+    )
+    x = shard(x, "batch", None, None)
+
+    def body(x, p):
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        attn_out, _ = A.self_attention(h, p["attn"], cfg, positions=jnp.zeros(x.shape[:2], jnp.int32), causal=False, use_rope=False)
+        x = x + attn_out
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + L.mlp_block(h, p["mlp"], cfg.mlp), None
+
+    body = _maybe_remat(body, cfg)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    else:
+        n = jax.tree.leaves(params["enc_layers"])[0].shape[0]
+        for i in range(n):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], params["enc_layers"]))
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(params: Params, cfg: ModelConfig, batch: dict, cache: dict | None = None):
+    """Returns (logits (B,S,V) fp32, aux scalar, new_cache)."""
+    x, positions = _embed_inputs(params, cfg, batch, cache)
+    x = shard(x, "batch", "seq", None)
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict | None = None
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        layer_caches = cache["layers"] if cache is not None else None
+        x, aux, new_lc = _scan_decoder(cfg, x, params["layers"], positions, layer_caches)
+        if cache is not None:
+            new_cache = {"layers": new_lc, "len": cache["len"] + x.shape[1]}
+    elif cfg.family == "ssm":
+        layer_caches = cache["layers"] if cache is not None else None
+        x, new_lc = _scan_mamba(cfg, x, params["layers"], layer_caches)
+        if cache is not None:
+            new_cache = {"layers": new_lc, "len": cache["len"] + x.shape[1]}
+    elif cfg.family == "hybrid":
+        sub = {"mamba": cache["mamba"], "attn": cache["attn"]} if cache is not None else None
+        x, aux, new_sub = _hybrid_stack(cfg, x, params, positions, sub)
+        if cache is not None:
+            new_cache = {**new_sub, "len": cache["len"] + x.shape[1]}
+    elif cfg.family == "audio":
+        if cache is not None and "enc_kv" in cache:
+            enc_kv = cache["enc_kv"]
+        else:
+            enc_out = _encode_audio(params, cfg, batch["frames"])
+            enc_kv = jax.vmap(
+                lambda p: A.encoder_kv(enc_out, p["xattn"], cfg)
+            )(params["layers"])
+        layer_caches = cache["layers"] if cache is not None else None
+
+        def body(carry, inp):
+            x, aux = carry
+            p, c, ekv = inp
+            x, a, new_c = _decoder_block(cfg, x, p, positions, c, enc_kv=ekv)
+            return (x, aux + a), new_c
+
+        body = _maybe_remat(body, cfg)
+        if cfg.scan_layers:
+            (x, aux), new_lc = jax.lax.scan(
+                body, (x, jnp.zeros((), jnp.float32)), (params["layers"], layer_caches, enc_kv)
+            )
+        else:
+            aux = jnp.zeros((), jnp.float32)
+            n = jax.tree.leaves(params["layers"])[0].shape[0]
+            lcs = []
+            for i in range(n):
+                p = jax.tree.map(lambda a: a[i], params["layers"])
+                c = jax.tree.map(lambda a: a[i], layer_caches) if layer_caches is not None else None
+                ek = jax.tree.map(lambda a: a[i], enc_kv)
+                (x, aux), nc = body((x, aux), (p, c, ek))
+                lcs.append(nc)
+            new_lc = (
+                jax.tree.map(lambda *ys: jnp.stack(ys), *lcs) if lcs and lcs[0] is not None else None
+            )
+        if cache is not None:
+            new_cache = {"layers": new_lc, "enc_kv": enc_kv, "len": cache["len"] + x.shape[1]}
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w_head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = L.lm_head(x, w_head)
+    return logits, aux, new_cache
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: dict, aux_weight: float = 0.01):
+    logits, aux, _ = forward(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        # loss only on the text positions (vision positions carry no labels)
+        n_vis = batch["vision_embeds"].shape[1]
+        logits = logits[:, n_vis:]
+    ce = L.cross_entropy(logits, labels)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}

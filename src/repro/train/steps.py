@@ -1,0 +1,94 @@
+"""train_step / prefill_step / serve_step factories.
+
+``make_train_step`` builds a pure (params, opt_state, batch) -> (params,
+opt_state, metrics) function with optional microbatch gradient accumulation
+(``lax.scan`` over microbatches -- activation memory divides by the count
+while keeping one optimizer step per global batch) and optional int8 gradient
+compression on the DP all-reduce.
+
+``make_serve_step`` is the decode step: one new token against a KV/SSM cache.
+``make_prefill_step`` is the logits-only forward used by the prefill shape
+cells.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    def re(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    out = {}
+    for k, v in batch.items():
+        if k == "positions" and v.ndim == 3:  # (3, B, S) m-rope positions
+            out[k] = jnp.stack(jnp.split(v, n, axis=1), axis=0)  # (n, 3, B/n, S)
+        else:
+            out[k] = re(v)
+    return out
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    n_microbatches: int = 1,
+    grad_transform: Callable[[Any], Any] | None = None,
+):
+    def loss(params, batch):
+        return T.loss_fn(params, cfg, batch)
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches == 1:
+            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params, batch)
+        else:
+            # Unrolled accumulation (not lax.scan): XLA shares the grad buffers
+            # across iterations, and cost analysis sees every microbatch.
+            micro = _split_microbatches(batch, n_microbatches)
+            grads = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            l = 0.0
+            metrics_acc = []
+            for i in range(n_microbatches):
+                mb = jax.tree.map(lambda x: x[i], micro)
+                (li, mi), gi = jax.value_and_grad(loss, has_aux=True)(params, mb)
+                grads = jax.tree.map(lambda a, b: a + b, grads, gi)
+                l = l + li
+                metrics_acc.append(mi)
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            l = l / n_microbatches
+            metrics = jax.tree.map(lambda *xs: jnp.mean(jnp.stack(xs)), *metrics_acc)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        new_params, new_opt, om = adamw_update(params, grads, opt_state, opt_cfg)
+        out_metrics = {"loss": l, **metrics, **om}
+        return new_params, new_opt, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, _, _ = T.forward(params, cfg, batch)
+        # serving returns only the last-position logits (next-token dist)
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, greedy: bool = True):
+    def serve_step(params, cache, batch):
+        logits, _, new_cache = T.forward(params, cfg, batch, cache)
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_token, new_cache
+
+    return serve_step

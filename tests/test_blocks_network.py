@@ -1,0 +1,103 @@
+"""Building blocks (Eq. 9-12) and whole-model decomposition."""
+
+import numpy as np
+import pytest
+
+from repro.accelerators import TPUv5eSim
+from repro.configs import ARCHS, get_config
+from repro.core import prs
+from repro.core.blocks import Block, FusingModel, NetworkEstimator, block_ops, fit_fusing_model
+from repro.core.estimator import build_estimator
+from repro.core.network import decompose, simulate_network
+from repro.models.config import SHAPES, shape_applicable
+
+
+@pytest.fixture(scope="module")
+def tpu():
+    return TPUv5eSim(knowledge="white")
+
+
+@pytest.fixture(scope="module")
+def dense_est(tpu):
+    return {"dense": build_estimator(tpu, "dense", 800, sampling="pr", seed=0)}
+
+
+def _mlp_blocks(n, rng):
+    out = []
+    for _ in range(n):
+        t = int(rng.choice([512, 1024, 2048, 4096]))
+        d = int(rng.choice([512, 1024, 2048]))
+        f = int(rng.choice([1024, 2048, 4096]))
+        out.append(
+            Block(
+                kind="mlp",
+                layers=(
+                    ("dense", {"tokens": t, "d_in": d, "d_out": f}),
+                    ("dense", {"tokens": t, "d_in": f, "d_out": d}),
+                ),
+            )
+        )
+    return out
+
+
+def test_fusing_factor_reduces_block_error(tpu, dense_est):
+    rng = np.random.default_rng(0)
+    train_blocks = _mlp_blocks(120, rng)
+    fusing = fit_fusing_model(tpu, dense_est, train_blocks)
+    est_plain = NetworkEstimator(estimators=dense_est)
+    est_fused = NetworkEstimator(estimators=dense_est, fusing={"mlp": fusing})
+    test_blocks = _mlp_blocks(40, np.random.default_rng(1))
+    err_plain, err_fused = [], []
+    for b in test_blocks:
+        t_true = tpu.measure_block(list(b.layers))
+        err_plain.append(abs(est_plain.predict_block(b) - t_true) / t_true)
+        err_fused.append(abs(est_fused.predict_block(b) - t_true) / t_true)
+    # the naive sum over-estimates overlapped blocks systematically; the
+    # Eq. 10/11 correction must not make things worse on held-out blocks
+    assert abs(np.mean(np.array(err_fused))) <= abs(np.mean(np.array(err_plain))) * 1.05
+    assert fusing.n_fit == 120
+
+
+def test_eq9_max_rule():
+    ests = {}
+    est = NetworkEstimator(estimators=ests, overlap_kinds=frozenset({"ov"}))
+
+    class Fake:
+        def predict_one(self, cfg):
+            return cfg["t"]
+
+    est = NetworkEstimator(estimators={"x": Fake()}, overlap_kinds=frozenset({"ov"}))
+    b = Block(kind="ov", layers=(("x", {"t": 3.0}), ("x", {"t": 5.0})))
+    assert est.predict_block(b) == 5.0  # max, not sum
+    b2 = Block(kind="seq", layers=b.layers)
+    assert est.predict_block(b2) == 8.0
+
+
+def test_block_ops_positive():
+    b = Block(kind="mlp", layers=(("dense", {"tokens": 10, "d_in": 4, "d_out": 8}),))
+    assert block_ops(b) == 2.0 * 10 * 4 * 8
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decompose_all_cells(arch, tpu):
+    """Every (arch x applicable shape) decomposes into measurable blocks."""
+    cfg = get_config(arch)
+    for shape in SHAPES.values():
+        if not shape_applicable(cfg, shape):
+            continue
+        blocks = decompose(cfg, shape, dp=16, tp=16)
+        assert blocks, (arch, shape.name)
+        t = simulate_network(tpu, blocks)
+        assert np.isfinite(t) and t > 0, (arch, shape.name)
+
+
+def test_decompose_moe_has_moe_block():
+    blocks = decompose(get_config("olmoe-1b-7b"), SHAPES["train_4k"], 16, 16)
+    assert any(b.kind == "moe" for b in blocks)
+    assert not any(b.kind == "ssd" for b in blocks)
+
+
+def test_decompose_hybrid_has_both():
+    blocks = decompose(get_config("zamba2-2.7b"), SHAPES["train_4k"], 16, 16)
+    kinds = {b.kind for b in blocks}
+    assert "ssd" in kinds and "attn" in kinds

@@ -1,0 +1,63 @@
+"""Random-Forest regression (from scratch)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.forest import RandomForestRegressor, mape, rmspe
+
+
+def test_fits_piecewise_constant():
+    rng = np.random.default_rng(0)
+    X = rng.integers(0, 8, size=(2000, 2)).astype(float)
+    y = X[:, 0] * 10 + X[:, 1]
+    f = RandomForestRegressor(n_estimators=16, max_depth=10, seed=0).fit(X, y)
+    yp = f.predict(X)
+    assert np.max(np.abs(yp - y)) < 1.0
+
+
+def test_fits_product_with_feature():
+    rng = np.random.default_rng(1)
+    a = rng.uniform(1, 50, size=3000)
+    b = rng.uniform(1, 50, size=3000)
+    X = np.stack([a, b, a * b], axis=1)  # derived feature
+    y = a * b
+    f = RandomForestRegressor(n_estimators=16, max_depth=16, seed=0).fit(X, y)
+    test = X[:200]
+    assert mape(y[:200], f.predict(test)) < 5.0
+
+
+def test_deterministic_given_seed():
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(300, 3))
+    y = X @ np.array([1.0, 2.0, 3.0])
+    f1 = RandomForestRegressor(n_estimators=8, seed=7).fit(X, y)
+    f2 = RandomForestRegressor(n_estimators=8, seed=7).fit(X, y)
+    assert np.array_equal(f1.predict(X), f2.predict(X))
+
+
+def test_min_samples_leaf():
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(100, 2))
+    y = rng.normal(size=100)
+    f = RandomForestRegressor(n_estimators=4, min_samples_leaf=10, seed=0).fit(X, y)
+    f.predict(X)  # no crash; leaves >= 10 samples
+
+
+def test_metrics():
+    y = np.array([1.0, 2.0, 4.0])
+    yp = np.array([1.1, 1.8, 4.0])
+    assert abs(mape(y, yp) - np.mean([10, 10, 0])) < 1e-9
+    assert rmspe(y, yp) >= mape(y, yp) - 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_property_no_extrapolation(seed):
+    """Forests only predict within the training range (paper Sec. 3.3)."""
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(0, 10, size=(200, 2))
+    y = X[:, 0] + X[:, 1]
+    f = RandomForestRegressor(n_estimators=8, seed=seed).fit(X, y)
+    X_out = rng.uniform(50, 100, size=(50, 2))  # far outside training
+    yp = f.predict(X_out)
+    assert np.all(yp <= y.max() + 1e-9) and np.all(yp >= y.min() - 1e-9)

@@ -1,0 +1,71 @@
+"""PR sets, sampling, and the Eq. 7/8 PR mapping."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.accelerators import UltraTrailSim
+from repro.core import prs
+
+
+SPACE = prs.ParamSpace(ranges={"C": (1, 56), "K": (1, 56), "W": (3, 256)})
+WIDTHS = {"C": 8, "K": 8, "W": 1}
+
+
+def test_pr_values():
+    assert list(prs.pr_values(1, 56, 8)) == [8, 16, 24, 32, 40, 48, 56]
+    assert list(prs.pr_values(3, 10, 1)) == list(range(3, 11))
+    assert list(prs.pr_values(1, 5, 8)) == [5]  # range smaller than one step
+
+
+def test_paper_exact_counts():
+    """The paper quotes |full|=95 585 280 and |PR|=1 493 520 for UltraTrail."""
+    ut = UltraTrailSim()
+    space = ut.param_space("conv1d")
+    widths = ut.known_step_widths("conv1d")
+    assert space.size() == 95_585_280
+    assert prs.count_pr_configs(space, widths) == 1_493_520
+
+
+def test_map_to_pr_ceil():
+    cfg = {"C": 9, "K": 16, "W": 100}
+    snapped = prs.map_to_pr(cfg, WIDTHS, SPACE)
+    assert snapped == {"C": 16, "K": 16, "W": 100}
+
+
+def test_map_to_pr_clips_to_space():
+    cfg = {"C": 55, "K": 2, "W": 3}
+    snapped = prs.map_to_pr(cfg, WIDTHS, SPACE)
+    assert snapped["C"] == 56  # ceil(55/8)*8 = 56 within range
+
+
+def test_samplers_stay_in_space():
+    rng = np.random.default_rng(0)
+    for c in prs.sample_pr_configs(SPACE, WIDTHS, 100, rng):
+        assert c["C"] % 8 == 0 and c["K"] % 8 == 0
+        assert 3 <= c["W"] <= 256
+    for c in prs.sample_random_configs(SPACE, 100, rng):
+        assert 1 <= c["C"] <= 56 and 3 <= c["W"] <= 256
+
+
+def test_configs_to_matrix_order():
+    X = prs.configs_to_matrix([{"C": 1, "K": 2, "W": 3}], ("C", "K", "W"))
+    assert X.tolist() == [[1.0, 2.0, 3.0]]
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    c=st.integers(1, 56),
+    k=st.integers(1, 56),
+    w=st.integers(3, 256),
+)
+def test_property_pr_mapping(c, k, w):
+    cfg = {"C": c, "K": k, "W": w}
+    snapped = prs.map_to_pr(cfg, WIDTHS, SPACE)
+    # idempotent
+    assert prs.map_to_pr(snapped, WIDTHS, SPACE) == snapped
+    # next-larger multiple, within one step
+    assert snapped["C"] >= min(c, snapped["C"])
+    assert snapped["C"] % 8 == 0 and 0 <= snapped["C"] - c < 8 or snapped["C"] == 56
+    # linear params untouched
+    assert snapped["W"] == w

@@ -1,0 +1,89 @@
+"""Algorithm 1: step-width detection from sweeps."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import steps
+
+
+def staircase(x, width, step_height=1.0, base=10.0, noise=0.0, seed=0):
+    y = base + step_height * np.ceil(x / width)
+    if noise:
+        rng = np.random.default_rng(seed)
+        y = y * rng.lognormal(0.0, noise, size=y.shape)
+    return y
+
+
+class TestLinearBehavior:
+    def test_linear_is_linear(self):
+        x = np.arange(1, 200)
+        assert steps.test_linear_behavior(x, 3.0 * x + 7)
+
+    def test_staircase_is_not_linear(self):
+        x = np.arange(1, 200)
+        assert not steps.test_linear_behavior(x, staircase(x, 16))
+
+    def test_constant_is_linear(self):
+        x = np.arange(1, 50)
+        assert steps.test_linear_behavior(x, np.full_like(x, 5.0, dtype=float))
+
+    def test_noisy_linear(self):
+        x = np.arange(1, 300)
+        y = (2.0 * x + 5) * np.random.default_rng(0).lognormal(0, 0.002, size=x.shape)
+        assert steps.test_linear_behavior(x, y)
+
+
+class TestFindStepWidth:
+    @pytest.mark.parametrize("width", [2, 8, 16, 64, 128])
+    def test_exact_staircase(self, width):
+        x = np.arange(1, max(6 * width, 64))
+        assert steps.find_step_width(x, staircase(x, width)) == width
+
+    @pytest.mark.parametrize("width", [8, 32])
+    def test_noisy_staircase(self, width):
+        x = np.arange(1, 8 * width)
+        y = staircase(x, width, noise=0.003)
+        assert steps.find_step_width(x, y) == width
+
+    def test_linear_returns_one(self):
+        x = np.arange(1, 100)
+        assert steps.find_step_width(x, 0.5 * x + 1) == 1
+
+    def test_sloped_staircase(self):
+        # step + linear component (common: tiles + streaming term)
+        x = np.arange(1, 200)
+        y = staircase(x, 16) + 0.002 * x
+        assert steps.find_step_width(x, y) == 16
+
+    def test_offset_sweep_window(self):
+        # sweep window not starting at 1 (anchored mid-range)
+        x = np.arange(1000, 1500)
+        assert steps.find_step_width(x, staircase(x, 128)) == 128
+
+
+def test_determine_step_widths_dict():
+    x = np.arange(1, 128)
+    sweeps = {
+        "a": (x, staircase(x, 8)),
+        "b": (x, 2.0 * x + 3),
+    }
+    assert steps.determine_step_widths(sweeps) == {"a": 8, "b": 1}
+
+
+def test_detect_pr_points():
+    x = np.arange(1, 33)
+    prs = steps.detect_pr_points(x, staircase(x, 8), 8)
+    assert list(prs) == [8, 16, 24, 32]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    width=st.sampled_from([2, 4, 8, 16, 32, 64]),
+    base=st.floats(1.0, 1e3),
+    height=st.floats(0.5, 10.0),
+)
+def test_property_recovers_planted_width(width, base, height):
+    x = np.arange(1, 7 * width + 1)
+    y = staircase(x, width, step_height=height, base=base)
+    assert steps.find_step_width(x, y) == width
