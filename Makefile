@@ -1,0 +1,16 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-smoke bench quickstart
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+bench-smoke:
+	$(PYTHON) -m benchmarks.run table1 fig2
+
+bench:
+	$(PYTHON) -m benchmarks.run
+
+quickstart:
+	$(PYTHON) examples/quickstart.py

@@ -3,36 +3,46 @@
 One curve pair per platform (UltraTrail/VTA/TPUv5e-gray/TPUv5e-black), the
 paper's headline comparison: PR sampling reaches a given MAPE with far fewer
 samples than random sampling of the complete parameter space.
+
+Runs through ``repro.api``: one Campaign per platform, so step widths are
+discovered once per layer type and every training-set size reuses them (the
+``saved`` column counts the sweep measurements this avoids), and the
+measurement cache deduplicates benchmark points across sizes and sampling
+policies.
 """
 
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import Timer, emit, sizes_for_curves
-from repro.accelerators import TPUv5eSim, UltraTrailSim, VTASim
-from repro.core import prs
-from repro.core.estimator import build_estimator
 from benchmarks.table1_single_layer import TCRESNET8, TPU_DENSE, VTA_FC
+from repro.api import Campaign, CampaignSpec
 
 CASES = [
-    ("fig4[ultratrail/conv1d]", UltraTrailSim(), "conv1d", TCRESNET8),
-    ("fig5[vta/fully_connected]", VTASim(), "fully_connected", VTA_FC),
-    ("fig6[tpu_v5e-gray/dense]", TPUv5eSim(knowledge="gray", noise=0.002), "dense", TPU_DENSE),
-    ("fig7[tpu_v5e-black/dense]", TPUv5eSim(knowledge="black", noise=0.002), "dense", TPU_DENSE),
+    ("fig4[ultratrail/conv1d]", "ultratrail", {}, "conv1d", TCRESNET8),
+    ("fig5[vta/fully_connected]", "vta", {}, "fully_connected", VTA_FC),
+    ("fig6[tpu_v5e-gray/dense]", "tpu_v5e", {"knowledge": "gray", "noise": 0.002}, "dense", TPU_DENSE),
+    ("fig7[tpu_v5e-black/dense]", "tpu_v5e", {"knowledge": "black", "noise": 0.002}, "dense", TPU_DENSE),
 ]
 
 
 def main() -> None:
-    for name, platform, layer, test in CASES:
+    for name, platform_name, platform_kwargs, layer, test in CASES:
+        campaign = Campaign(
+            CampaignSpec(platform=platform_name, layer_types=(layer,), seed=0,
+                         platform_kwargs=platform_kwargs)
+        )
         for sampling in ("pr", "random"):
-            points = []
             with Timer() as t:
-                for n in sizes_for_curves():
-                    est = build_estimator(platform, layer, n, sampling=sampling, seed=0)
-                    m = est.evaluate(platform, test)
-                    points.append(f"{n}:{m['mape']:.2f}%")
-            emit(f"{name}/{sampling}", t.us(len(points)), ";".join(points))
+                curve = campaign.sampling_curve(
+                    layer, sizes_for_curves(), test, sampling=sampling, seed=0
+                )
+            points = [f"{p['n']}:{p['mape']:.2f}%" for p in curve]
+            saved = curve[-1]["sweeps_saved"]
+            emit(
+                f"{name}/{sampling}",
+                t.us(len(points)),
+                ";".join(points) + f";sweeps_saved={saved}",
+            )
 
 
 if __name__ == "__main__":

@@ -1,17 +1,17 @@
 """Table 1: best single-layer estimation accuracy per platform x layer type.
 
 PR-sampled training sets (paper: <=9000 points; CI scale: 2000), evaluated on
-realistic held-out layer configurations; reports RMSPE / MAPE and the mean
-measurement time per benchmark point (the cost the PR method saves).
+realistic held-out layer configurations; reports RMSPE / MAPE, the mean
+measurement time per benchmark point (the cost the PR method saves), and the
+campaign cache's unique-measurement count.
+
+Runs entirely through ``repro.api`` (CampaignSpec -> Campaign -> PerfOracle).
 """
 
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import Timer, emit, table1_size
-from repro.accelerators import TPUv5eSim, UltraTrailSim, VTASim, XLACPUPlatform
-from repro.core.estimator import build_estimator
+from repro.api import Campaign, CampaignSpec
 
 # Realistic test layers per platform/layer type (the paper uses TC-ResNet8 and
 # Keras-zoo layers; here: TC-ResNet8 for UltraTrail, VGG/ResNet-ish for VTA,
@@ -61,15 +61,16 @@ TPU_SSD = [
     {"B": 16, "S": 4096, "H": 5, "P": 64, "N": 64},
 ]
 
+# (platform name, platform kwargs, layer type, test configs, budget fraction)
 CASES = [
-    (UltraTrailSim(), "conv1d", TCRESNET8, 1.0),
-    (VTASim(), "conv2d", VTA_CONV, 1.0),
-    (VTASim(), "fully_connected", VTA_FC, 1.0),
-    (TPUv5eSim(knowledge="gray", noise=0.002), "dense", TPU_DENSE, 1.0),
-    (TPUv5eSim(knowledge="gray", noise=0.002), "attention_prefill", TPU_ATTN, 1.0),
-    (TPUv5eSim(knowledge="gray", noise=0.002, moe_experts=8), "moe_gemm", TPU_MOE, 0.5),
-    (TPUv5eSim(knowledge="black", noise=0.002), "ssd_scan", TPU_SSD, 0.5),
-    (XLACPUPlatform(repeats=3), "dense",
+    ("ultratrail", {}, "conv1d", TCRESNET8, 1.0),
+    ("vta", {}, "conv2d", VTA_CONV, 1.0),
+    ("vta", {}, "fully_connected", VTA_FC, 1.0),
+    ("tpu_v5e", {"knowledge": "gray", "noise": 0.002}, "dense", TPU_DENSE, 1.0),
+    ("tpu_v5e", {"knowledge": "gray", "noise": 0.002}, "attention_prefill", TPU_ATTN, 1.0),
+    ("tpu_v5e", {"knowledge": "gray", "noise": 0.002, "moe_experts": 8}, "moe_gemm", TPU_MOE, 0.5),
+    ("tpu_v5e", {"knowledge": "black", "noise": 0.002}, "ssd_scan", TPU_SSD, 0.5),
+    ("xla_cpu", {"repeats": 3}, "dense",
      [{"tokens": 96, "d_in": 384, "d_out": 160}, {"tokens": 160, "d_in": 96, "d_out": 320}],
      0.05),  # real measurements are expensive: tiny training set
 ]
@@ -77,16 +78,28 @@ CASES = [
 
 def main() -> None:
     n_base = table1_size()
-    for platform, layer, test, frac in CASES:
+    for platform_name, platform_kwargs, layer, test, frac in CASES:
         n = max(100, int(n_base * frac))
+        spec = CampaignSpec(
+            platform=platform_name,
+            layer_types=(layer,),
+            sampling="pr",
+            n_samples=n,
+            seed=0,
+            platform_kwargs=platform_kwargs,
+        )
+        campaign = Campaign(spec)
         with Timer() as t:
-            est = build_estimator(platform, layer, n, sampling="pr", seed=0)
-            m = est.evaluate(platform, test)
+            oracle = campaign.run()
+            m = oracle.evaluate(campaign.platform, layer, test)
+        est = oracle.estimators[layer]
+        stats = campaign.stats()
         emit(
-            f"table1[{platform.name}/{layer}]",
+            f"table1[{campaign.platform.name}/{layer}]",
             t.us(n),
             f"n={n};rmspe={m['rmspe']:.2f}%;mape={m['mape']:.2f}%;"
-            f"meas_time_s={est.mean_measure_seconds:.2e};sweep_pts={est.n_sweep}",
+            f"meas_time_s={est.mean_measure_seconds:.2e};sweep_pts={est.n_sweep};"
+            f"unique_meas={stats['unique_measurements']};cache_hits={stats['hits']}",
         )
 
 

@@ -14,9 +14,9 @@ import numpy as np
 
 from benchmarks.common import Timer, emit, scale
 from repro.accelerators import TPUv5eSim
+from repro.api import Campaign, CampaignSpec, PerfOracle
 from repro.configs import get_config
-from repro.core.blocks import Block, NetworkEstimator, fit_fusing_model
-from repro.core.estimator import build_estimator
+from repro.core.blocks import Block, fit_fusing_model
 from repro.core.network import decompose, simulate_network
 from repro.models.config import SHAPES
 
@@ -52,19 +52,24 @@ def _block_training_set(blocks_per_kind: int, rng) -> list[Block]:
     return out
 
 
-def build_network_estimator(platform, n_per_layer: int = 1200) -> NetworkEstimator:
+def build_network_estimator(platform, n_per_layer: int = 1200) -> PerfOracle:
+    """Campaign over every TPU layer type -> PerfOracle with fusing models."""
     layer_types = ("dense", "attention_prefill", "attention_decode", "moe_gemm", "ssd_scan", "embed")
-    ests = {}
-    for lt in layer_types:
-        moe_kwargs = {}
-        ests[lt] = build_estimator(platform, lt, n_per_layer, sampling="pr", seed=0)
-    rng = np.random.default_rng(0)
-    fusing = {"mlp": fit_fusing_model(platform, ests, _block_training_set(60, rng))}
-    return NetworkEstimator(
-        estimators=ests,
-        fusing=fusing,
-        launch_overhead_s=platform.chip.launch_overhead_s,  # documented (gray box)
+    spec = CampaignSpec(
+        platform=platform.name,
+        layer_types=layer_types,
+        sampling="pr",
+        n_samples=n_per_layer,
+        seed=0,
     )
+    campaign = Campaign(spec, platform=platform)
+    oracle = campaign.run()
+    rng = np.random.default_rng(0)
+    oracle.fusing = {
+        "mlp": fit_fusing_model(campaign.platform, oracle.estimators, _block_training_set(60, rng))
+    }
+    oracle.launch_overhead_s = platform.chip.launch_overhead_s  # documented (gray box)
+    return oracle
 
 
 def main() -> None:

@@ -1,54 +1,70 @@
-"""Quickstart: the PR methodology end-to-end on one platform, in ~1 minute.
+"""Quickstart: the PR methodology end-to-end through ``repro.api``, in ~1 min.
 
   PYTHONPATH=src python examples/quickstart.py
 
-Walks the Fig. 1 pipeline on the (white-box) UltraTrail simulator:
-  1. parameter sweeps + Algorithm 1 -> step widths,
-  2. PR set -> sample + benchmark only PRs,
-  3. Random-Forest estimator + PR mapping at query time,
-  4. estimate real TC-ResNet8 layers and compare against ground truth,
-  5. the PR-vs-random-sampling comparison (the paper's headline).
+Walks the Fig. 1 pipeline on the (white-box) UltraTrail simulator, entirely
+through the campaign API:
+  1. a CampaignSpec declares platform / sampling policy / budget,
+  2. Campaign.run(): sweeps + Algorithm 1 -> step widths -> PR set ->
+     benchmark only PRs -> Random-Forest -> a PerfOracle,
+  3. the oracle estimates real TC-ResNet8 layers vs ground truth,
+  4. the estimator round-trips through an EstimatorHub (save -> load),
+  5. the PR-vs-random-sampling comparison (the paper's headline) — and the
+     measurement cache shows how few unique benchmark points it all cost.
 """
+
+import tempfile
 
 import numpy as np
 
-from repro.accelerators import UltraTrailSim
-from repro.core import prs, steps, sweeps
-from repro.core.estimator import build_estimator
+from repro.api import Campaign, CampaignSpec, EstimatorHub, PerfOracle
+from repro.core import prs
 
-ut = UltraTrailSim()
+# 1. Declare the campaign.
+spec = CampaignSpec(platform="ultratrail", layer_types=("conv1d",), n_samples=1500, seed=0)
+campaign = Campaign(spec)
+ut = campaign.platform  # cached view of the platform
 
-# 1. Sweeps + Algorithm 1 (pretend we don't have the documentation)
-sw = sweeps.run_sweeps(ut, "conv1d", params=("C", "K", "C_w"), n_points=56)
-widths = steps.determine_step_widths(sw)
-print(f"Algorithm 1 discovered step widths: {widths}")
+# 2. Run the Fig. 1 pipeline.
+oracle = campaign.run()
+widths, _ = campaign.discover_widths("conv1d")
+print(f"step widths: {widths}")
 print(f"  (documentation says: {ut.known_step_widths('conv1d')})")
 
-# 2. PR set statistics
 space = ut.param_space("conv1d")
 n_full = space.size()
-n_pr = prs.count_pr_configs(space, ut.known_step_widths("conv1d"))
+n_pr = prs.count_pr_configs(space, widths)
 print(f"parameter space: {n_full:,} configs; PR set: {n_pr:,} ({n_full / n_pr:.0f}x smaller)")
 
-# 3./4. PR-trained estimator on TC-ResNet8 layers
+# 3. Estimate real TC-ResNet8 layers and compare against ground truth.
 tcresnet8 = [
     {"C": 40, "C_w": 101, "K": 16, "F": 3, "s": 1, "pad": 1},
     {"C": 16, "C_w": 101, "K": 24, "F": 9, "s": 2, "pad": 4},
     {"C": 32, "C_w": 26, "K": 48, "F": 9, "s": 2, "pad": 4},
 ]
-est = build_estimator(ut, "conv1d", n_samples=1500, sampling="pr", seed=0)
-m = est.evaluate(ut, tcresnet8)
+m = oracle.evaluate(ut, "conv1d", tcresnet8)
 print(f"PR estimator on TC-ResNet8 layers: MAPE={m['mape']:.2f}%  RMSPE={m['rmspe']:.2f}%")
-for layer in tcresnet8:
+for layer, t_est in zip(tcresnet8, oracle.predict("conv1d", tcresnet8)):
     t_true = ut.measure("conv1d", layer)
-    t_est = est.predict_one(layer)
     print(f"  C={layer['C']:>2} K={layer['K']:>2} F={layer['F']}: "
           f"measured {t_true*1e6:7.1f}us  estimated {t_est*1e6:7.1f}us")
 
-# 5. PR vs random sampling at the same budget
+# 4. Persist + reload: no re-measuring, bitwise-identical predictions.
+with tempfile.TemporaryDirectory() as d:
+    oracle.save(EstimatorHub(d))
+    reloaded = PerfOracle.load(EstimatorHub(d), oracle.platform_name)
+    same = np.array_equal(oracle.predict("conv1d", tcresnet8),
+                          reloaded.predict("conv1d", tcresnet8))
+    print(f"hub round-trip predictions identical: {same}")
+
+# 5. PR vs random sampling at the same budget.
 rng = np.random.default_rng(0)
 test = prs.sample_random_configs(space, 60, rng)
-m_pr = build_estimator(ut, "conv1d", 800, sampling="pr", seed=1).evaluate(ut, test)
-m_rand = build_estimator(ut, "conv1d", 800, sampling="random", seed=1).evaluate(ut, test)
+m_pr = campaign.train("conv1d", n_samples=800, sampling="pr", seed=1).evaluate(ut, test)
+m_rand = campaign.train("conv1d", n_samples=800, sampling="random", seed=1).evaluate(ut, test)
 print(f"800 samples, PR sampling:     MAPE={m_pr['mape']:.2f}%")
 print(f"800 samples, random sampling: MAPE={m_rand['mape']:.2f}%")
+
+stats = campaign.stats()
+print(f"cache: {stats['unique_measurements']} unique benchmark points measured, "
+      f"{stats['hits']} repeat requests served for free")

@@ -48,6 +48,16 @@ class Platform(abc.ABC):
         """
         return None
 
+    def cache_key(self) -> str:
+        """Identity under which measurements may be memoized/shared.
+
+        Two platform instances with the same cache key MUST produce the same
+        measurement for the same config.  Platforms whose timing model depends
+        on constructor parameters not reflected in ``name`` must override
+        this to include them.
+        """
+        return self.name
+
     # ---- measurement ---------------------------------------------------------------
     @abc.abstractmethod
     def measure(self, layer_type: str, cfg: Config) -> float:

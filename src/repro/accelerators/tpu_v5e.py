@@ -34,6 +34,7 @@ import math
 import numpy as np
 
 from repro.accelerators.base import Platform
+from repro.api.registry import register_platform
 from repro.core.prs import Config, ParamSpace
 
 
@@ -81,6 +82,13 @@ class TPUv5eSim(Platform):
         self.moe_topk = moe_topk
         self.kv_ratio = kv_ratio
         self.chip = chip
+
+    def cache_key(self) -> str:
+        # The timing model depends on these beyond what `name` encodes.
+        return (
+            f"{self.name}|noise={self.noise}|E={self.moe_experts}"
+            f"|topk={self.moe_topk}|kv={self.kv_ratio}"
+        )
 
     # ------------------------------------------------------------- capability
     def layer_types(self) -> tuple[str, ...]:
@@ -233,3 +241,6 @@ class TPUv5eSim(Platform):
         ici_s = collective_bytes / (self.chip.ici_bandwidth * self.chip.ici_links)
         t = max(flop_s, mem_s, ici_s) + self.chip.launch_overhead_s
         return t * self._noise_factor("block", {"n": len(layers)})
+
+
+register_platform("tpu_v5e", TPUv5eSim)

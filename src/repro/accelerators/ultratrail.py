@@ -15,6 +15,7 @@ from __future__ import annotations
 import math
 
 from repro.accelerators.base import Platform
+from repro.api.registry import register_platform
 from repro.core.prs import Config, ParamSpace
 
 
@@ -66,3 +67,6 @@ class UltraTrailSim(Platform):
         post_cycles = k_tiles * w_out
         cycles = mac_cycles + post_cycles + self.OVERHEAD_CYCLES
         return cycles / self.CLOCK_HZ
+
+
+register_platform("ultratrail", UltraTrailSim)

@@ -12,6 +12,7 @@ from __future__ import annotations
 import math
 
 from repro.accelerators.base import Platform
+from repro.api.registry import register_platform
 from repro.core.prs import Config, ParamSpace
 
 
@@ -76,3 +77,6 @@ class VTASim(Platform):
         else:
             cycles = self._gemm_cycles(1, cfg["in"], cfg["out"])
         return (cycles + self.OVERHEAD_CYCLES) / self.CLOCK_HZ
+
+
+register_platform("vta", VTASim)

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.accelerators.base import Platform
+from repro.api.registry import register_platform
 from repro.core.prs import Config, ParamSpace
 
 
@@ -36,6 +37,9 @@ class XLACPUPlatform(Platform):
         self.repeats = repeats
         self.dtype = dtype
         self._cache: dict[tuple, float] = {}
+
+    def cache_key(self) -> str:
+        return f"{self.name}|dtype={jnp.dtype(self.dtype).name}|repeats={self.repeats}"
 
     def layer_types(self) -> tuple[str, ...]:
         return ("dense",)
@@ -64,3 +68,6 @@ class XLACPUPlatform(Platform):
         t = float(np.median(samples))
         self._cache[key] = t
         return t
+
+
+register_platform("xla_cpu", XLACPUPlatform)

@@ -1,0 +1,185 @@
+"""Measurement cache: memoize ``(platform, layer_type, config) -> time``.
+
+Benchmarking is the expensive resource the whole PR methodology exists to
+conserve (the paper quotes multi-minute RTL simulations per point).  Within a
+campaign the same configuration is routinely requested several times — sweep
+windows overlap PR samples, training sets overlap evaluation sets, and
+``sampling_curve`` re-trains at growing budgets over the same PR grid — so the
+cache guarantees every unique configuration is measured **at most once**.
+
+Discovered step widths are memoized alongside (keyed by platform, layer type
+and detection threshold) so size scans and repeated campaigns reuse the sweep
+result instead of re-sweeping.
+
+``CachedPlatform`` wraps any :class:`~repro.accelerators.base.Platform` with
+the cache transparently, so the sweep/training/evaluation code paths need no
+changes to benefit.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.accelerators.base import Platform
+from repro.core.prs import Config, ParamSpace
+
+
+def config_key(layer_type: str, cfg: Config) -> tuple:
+    """Canonical hashable key for one layer configuration."""
+    return (layer_type, tuple(sorted(cfg.items())))
+
+
+class MeasurementCache:
+    """Memoizes single-layer measurements and discovered step widths."""
+
+    def __init__(self) -> None:
+        #: (platform, layer_type, sorted cfg items) -> seconds
+        self._times: dict[tuple, float] = {}
+        #: (platform, layer_type, threshold, n_points) -> (widths, n_meas)
+        self._widths: dict[tuple, tuple[dict[str, int], int]] = {}
+        self.hits = 0
+        self.misses = 0
+        #: wall-clock seconds spent inside actual (miss) measurements
+        self.measure_seconds = 0.0
+
+    # ------------------------------------------------------------- measurements
+    def lookup(self, platform: str, layer_type: str, cfg: Config) -> float | None:
+        t = self._times.get((platform,) + config_key(layer_type, cfg))
+        if t is not None:
+            self.hits += 1
+        return t
+
+    def store(self, platform: str, layer_type: str, cfg: Config, seconds: float) -> None:
+        self._times[(platform,) + config_key(layer_type, cfg)] = seconds
+        self.misses += 1
+
+    @property
+    def n_unique(self) -> int:
+        return len(self._times)
+
+    @property
+    def mean_measure_seconds(self) -> float:
+        """Mean wall-clock cost per *actual* measurement (cache misses only)."""
+        return self.measure_seconds / max(1, self.misses)
+
+    # ------------------------------------------------------------- step widths
+    def lookup_widths(
+        self, platform: str, layer_type: str, threshold: float, n_points: int
+    ) -> tuple[dict[str, int], int] | None:
+        return self._widths.get((platform, layer_type, threshold, n_points))
+
+    def store_widths(
+        self,
+        platform: str,
+        layer_type: str,
+        threshold: float,
+        n_points: int,
+        widths: Mapping[str, int],
+        n_meas: int,
+    ) -> None:
+        self._widths[(platform, layer_type, threshold, n_points)] = (dict(widths), n_meas)
+
+    # ------------------------------------------------------------- persistence
+    def save(self, path: str) -> None:
+        """Persist the cache as JSON (times + widths) for cross-run reuse."""
+        payload = {
+            "times": [[list(k[:2]) + [list(k[2])], v] for k, v in self._times.items()],
+            "widths": [[list(k), [w, n]] for k, (w, n) in self._widths.items()],
+        }
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: str) -> "MeasurementCache":
+        cache = cls()
+        with open(path) as f:
+            payload = json.load(f)
+        for (plat, lt, items), v in payload["times"]:
+            cache._times[(plat, lt, tuple((p, int(x)) for p, x in items))] = float(v)
+        for (plat, lt, thr, npts), (w, n) in payload["widths"]:
+            cache._widths[(plat, lt, float(thr), int(npts))] = (
+                {p: int(x) for p, x in w.items()},
+                int(n),
+            )
+        return cache
+
+    def stats(self) -> dict[str, float]:
+        return {
+            "unique_measurements": self.n_unique,
+            "hits": self.hits,
+            "misses": self.misses,
+            "measure_seconds": self.measure_seconds,
+        }
+
+
+class CachedPlatform(Platform):
+    """Transparent caching proxy around a real :class:`Platform`.
+
+    Delegates capability description to the inner platform and routes every
+    ``measure`` through the shared :class:`MeasurementCache`, so all pipeline
+    stages (sweeps, PR-sample benchmarking, evaluation) share one pool of
+    measurements.
+    """
+
+    def __init__(self, inner: Platform, cache: MeasurementCache | None = None) -> None:
+        self.inner = inner
+        self.cache = cache if cache is not None else MeasurementCache()
+
+    # ---- capability description (delegated) ----------------------------------
+    @property
+    def name(self) -> str:  # type: ignore[override]
+        return self.inner.name
+
+    @property
+    def knowledge(self) -> str:  # type: ignore[override]
+        return self.inner.knowledge
+
+    def layer_types(self) -> tuple[str, ...]:
+        return self.inner.layer_types()
+
+    def param_space(self, layer_type: str) -> ParamSpace:
+        return self.inner.param_space(layer_type)
+
+    def defaults(self, layer_type: str) -> Config:
+        return self.inner.defaults(layer_type)
+
+    def known_step_widths(self, layer_type: str) -> dict[str, int] | None:
+        return self.inner.known_step_widths(layer_type)
+
+    def cache_key(self) -> str:
+        return self.inner.cache_key()
+
+    # ---- measurement (cached) ------------------------------------------------
+    def measure(self, layer_type: str, cfg: Config) -> float:
+        t = self.cache.lookup(self.inner.cache_key(), layer_type, cfg)
+        if t is not None:
+            return t
+        t0 = time.perf_counter()
+        t = self.inner.measure(layer_type, cfg)
+        self.cache.measure_seconds += time.perf_counter() - t0
+        self.cache.store(self.inner.cache_key(), layer_type, cfg, t)
+        return t
+
+    def measure_block(self, layers: Sequence[tuple[str, Config]], **kwargs) -> float:
+        # Block execution is fused/overlapped — semantically distinct from the
+        # sum of single-layer times, so it bypasses the single-layer cache.
+        return self.inner.measure_block(layers, **kwargs)
+
+    def timed_measure_many(
+        self, layer_type: str, configs: Sequence[Config]
+    ) -> tuple[np.ndarray, float]:
+        """Like the base class, but the per-point cost counts misses only."""
+        misses_before = self.cache.misses
+        spent_before = self.cache.measure_seconds
+        y = self.measure_many(layer_type, configs)
+        new_misses = self.cache.misses - misses_before
+        mean = (self.cache.measure_seconds - spent_before) / max(1, new_misses)
+        return y, mean

@@ -1,0 +1,250 @@
+"""Campaigns: the declarative front door to the paper's Fig.-1 pipeline.
+
+A :class:`CampaignSpec` names *what* to benchmark (platform, layer types,
+sampling policy, budget); a :class:`Campaign` runs the pipeline — sweeps ->
+Algorithm-1 step widths -> PR set -> sample + benchmark -> Random-Forest —
+and returns a :class:`~repro.api.oracle.PerfOracle`.
+
+Two invariants the campaign enforces that the old free-function pipeline
+could not:
+
+* every unique ``(layer_type, config)`` is **measured at most once** per
+  campaign (all stages share one :class:`~repro.api.cache.MeasurementCache`);
+* step widths are **discovered at most once** per ``(platform, layer_type)``
+  — size scans (:meth:`Campaign.sampling_curve`) and repeated trainings reuse
+  the first sweep instead of re-sweeping.
+
+Trained estimators are persisted through an
+:class:`~repro.api.hub.EstimatorHub` when the spec names a ``hub_dir``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.accelerators.base import Platform
+from repro.api.cache import CachedPlatform, MeasurementCache
+from repro.api.hub import EstimatorHub
+from repro.api.oracle import PerfOracle
+from repro.api.registry import get_platform
+from repro.core import prs, sweeps
+from repro.core.estimator import LayerEstimator
+from repro.core.forest import RandomForestRegressor
+
+
+def train_layer_estimator(
+    platform: Platform,
+    layer_type: str,
+    n_samples: int,
+    sampling: str = "pr",
+    seed: int = 0,
+    threshold_linear: float = 0.02,
+    forest_kwargs: dict | None = None,
+    widths: Mapping[str, int] | None = None,
+    n_sweep: int = 0,
+) -> LayerEstimator:
+    """Train a single-layer estimator (the Fig.-1 pipeline for one layer type).
+
+    sampling:
+      * "pr"          -- sample from the PR set (the paper's method),
+      * "random"      -- sample uniformly from the complete parameter space
+                         (the paper's baseline comparison),
+      * "random_pr"   -- random sampling *of PR points* (ablation).
+
+    ``widths``: pass pre-discovered step widths to skip the sweep phase;
+    ``n_sweep`` then records how many sweep measurements their discovery cost
+    (0 when they came for free, e.g. from a cache hit or documentation).
+    """
+    rng = np.random.default_rng(seed)
+    space = platform.param_space(layer_type)
+    if widths is None:
+        if sampling == "random":
+            widths = {p: 1 for p in space.params}
+        else:
+            widths, _, n_sweep = sweeps.discover_step_widths(
+                platform, layer_type, threshold_linear
+            )
+    if sampling in ("pr", "random_pr"):
+        configs = prs.sample_pr_configs(space, widths, n_samples, rng)
+    elif sampling == "random":
+        configs = prs.sample_random_configs(space, n_samples, rng)
+    else:
+        raise ValueError(sampling)
+
+    y, mean_t = platform.timed_measure_many(layer_type, configs)
+    fk = dict(n_estimators=32, max_depth=30, min_samples_leaf=1, seed=seed)
+    fk.update(forest_kwargs or {})
+    forest = RandomForestRegressor(**fk)
+    est = LayerEstimator(
+        layer_type=layer_type,
+        params=space.params,
+        widths=widths,
+        space=space,
+        forest=forest,
+        n_train=n_samples,
+        n_sweep=n_sweep,
+        mean_measure_seconds=mean_t,
+        sampling=sampling,
+    )
+    X = est._features(configs, snap=(sampling != "random"))
+    target = np.log(np.asarray(y)) if est.log_target else np.asarray(y)
+    forest.fit(X, target)
+    return est
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignSpec:
+    """Declarative description of one benchmarking campaign."""
+
+    #: registered platform name (see repro.api.registry), e.g. "ultratrail"
+    platform: str
+    #: layer types to train; () means every type the platform supports
+    layer_types: tuple[str, ...] = ()
+    #: "pr" | "random" | "random_pr"
+    sampling: str = "pr"
+    #: benchmark points per layer type
+    n_samples: int = 1000
+    seed: int = 0
+    threshold_linear: float = 0.02
+    forest_kwargs: Mapping | None = None
+    #: constructor kwargs for the registry factory, e.g. {"knowledge": "gray"}
+    platform_kwargs: Mapping | None = None
+    #: persist trained estimators here (EstimatorHub directory)
+    hub_dir: str | None = None
+
+
+class Campaign:
+    """Runs a :class:`CampaignSpec` end to end with shared measurement cache."""
+
+    def __init__(
+        self,
+        spec: CampaignSpec,
+        platform: Platform | None = None,
+        cache: MeasurementCache | None = None,
+        hub: EstimatorHub | None = None,
+    ) -> None:
+        self.spec = spec
+        inner = platform if platform is not None else get_platform(
+            spec.platform, **dict(spec.platform_kwargs or {})
+        )
+        self.platform = (
+            inner if isinstance(inner, CachedPlatform) else CachedPlatform(inner, cache)
+        )
+        self.cache = self.platform.cache
+        if hub is not None:
+            self.hub = hub
+        elif spec.hub_dir:
+            self.hub = EstimatorHub(spec.hub_dir)
+        else:
+            self.hub = None
+        self.estimators: dict[str, LayerEstimator] = {}
+
+    # ------------------------------------------------------------- step widths
+    def discover_widths(
+        self, layer_type: str, n_points: int = 384
+    ) -> tuple[dict[str, int], int]:
+        """Memoized Algorithm-1 width discovery.
+
+        Returns ``(widths, n_sweep_spent_now)`` — the second element is 0 on a
+        cache hit, i.e. when this campaign (or a shared cache) already paid
+        for the sweeps.
+        """
+        thr = self.spec.threshold_linear
+        hit = self.cache.lookup_widths(self.platform.cache_key(), layer_type, thr, n_points)
+        if hit is not None:
+            return dict(hit[0]), 0
+        widths, _, n_meas = sweeps.discover_step_widths(
+            self.platform, layer_type, thr, n_points=n_points
+        )
+        self.cache.store_widths(self.platform.cache_key(), layer_type, thr, n_points, widths, n_meas)
+        return dict(widths), n_meas
+
+    # ------------------------------------------------------------- training
+    def train(
+        self,
+        layer_type: str,
+        n_samples: int | None = None,
+        sampling: str | None = None,
+        seed: int | None = None,
+    ) -> LayerEstimator:
+        """Train (and register) the estimator for one layer type."""
+        sampling = sampling if sampling is not None else self.spec.sampling
+        if sampling == "random":
+            widths, n_sweep = None, 0
+        else:
+            widths, n_sweep = self.discover_widths(layer_type)
+        est = train_layer_estimator(
+            self.platform,
+            layer_type,
+            n_samples if n_samples is not None else self.spec.n_samples,
+            sampling=sampling,
+            seed=seed if seed is not None else self.spec.seed,
+            threshold_linear=self.spec.threshold_linear,
+            forest_kwargs=dict(self.spec.forest_kwargs) if self.spec.forest_kwargs else None,
+            widths=widths,
+            n_sweep=n_sweep,
+        )
+        self.estimators[layer_type] = est
+        if self.hub is not None:
+            self.hub.save(self.platform.name, est)
+        return est
+
+    def run(self, **oracle_kwargs) -> PerfOracle:
+        """Train every layer type in the spec and return the oracle."""
+        layer_types = self.spec.layer_types or self.platform.layer_types()
+        for lt in layer_types:
+            if lt not in self.estimators:
+                self.train(lt)
+        return PerfOracle(
+            estimators=dict(self.estimators),
+            platform_name=self.platform.name,
+            **oracle_kwargs,
+        )
+
+    # ------------------------------------------------------------- size scans
+    def sampling_curve(
+        self,
+        layer_type: str,
+        sizes: Sequence[int],
+        test_configs: Sequence[prs.Config],
+        sampling: str | None = None,
+        seed: int | None = None,
+    ) -> list[dict[str, float]]:
+        """MAPE/RMSPE vs training-set size (Figs. 4-7).
+
+        Step widths are discovered once and reused for every size; each entry
+        reports ``sweeps_saved`` — the sweep measurements the old
+        re-sweep-per-size pipeline would have spent by that point.
+        """
+        sampling = sampling if sampling is not None else self.spec.sampling
+        out = []
+        sweep_cost = 0
+        saved = 0
+        for i, n in enumerate(sizes):
+            t0 = time.perf_counter()
+            est = self.train(layer_type, n_samples=n, sampling=sampling, seed=seed)
+            metrics = est.evaluate(self.platform, test_configs)
+            if sampling != "random":
+                if i == 0:
+                    sweep_cost = est.n_sweep or self.cache.lookup_widths(
+                        self.platform.cache_key(), layer_type, self.spec.threshold_linear, 384
+                    )[1]
+                else:
+                    saved += sweep_cost
+            metrics.update(
+                n=n,
+                sampling=sampling,
+                train_wall_s=time.perf_counter() - t0,
+                n_sweep=est.n_sweep,
+                sweeps_saved=saved,
+            )
+            out.append(metrics)
+        return out
+
+    # ------------------------------------------------------------- bookkeeping
+    def stats(self) -> dict[str, float]:
+        return self.cache.stats()

@@ -1,0 +1,147 @@
+"""PerfOracle: the uniform query surface over trained layer estimators.
+
+Every consumer of trained estimators — whole-network estimation
+(:mod:`repro.core.blocks`), the distribution advisor
+(:mod:`repro.core.advisor`), serving (:mod:`repro.launch.serve`) — queries
+through the same object and the same batched entry point,
+``predict(layer_type, configs)``.
+
+Network prediction is batch-vectorized: all layer instances across all blocks
+are grouped by layer type and pushed through each forest in **one**
+``predict`` call per type, instead of one call per layer.  A 40-layer network
+with 3 layer types costs 3 forest traversal batches, not 120 single-row calls.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.accelerators.base import Platform
+from repro.core.blocks import Block, FusingModel
+from repro.core.estimator import LayerEstimator
+from repro.core.forest import mape, rmspe
+from repro.core.prs import Config
+
+
+@dataclasses.dataclass
+class PerfOracle:
+    """Batched query surface over per-layer-type estimators (Eq. 7-12)."""
+
+    estimators: Mapping[str, LayerEstimator]
+    fusing: Mapping[str, FusingModel] = dataclasses.field(default_factory=dict)
+    #: block kinds whose layers execute on overlapping FUs (Eq. 9 max rule)
+    overlap_kinds: frozenset[str] = frozenset()
+    #: documented per-launch overhead (gray-box knowledge)
+    launch_overhead_s: float = 0.0
+    platform_name: str = ""
+
+    # ------------------------------------------------------------ single layer
+    def layer_types(self) -> tuple[str, ...]:
+        return tuple(self.estimators)
+
+    def predict(self, layer_type: str, configs: Sequence[Config]) -> np.ndarray:
+        """Batched Eq. 7/8 prediction for one layer type."""
+        est = self.estimators[layer_type]
+        if hasattr(est, "predict"):
+            return np.asarray(est.predict(configs), dtype=np.float64)
+        # Minimal estimator stubs (tests, analytical models) may expose only
+        # predict_one; degrade to a per-config loop.
+        return np.array([est.predict_one(c) for c in configs], dtype=np.float64)
+
+    def predict_one(self, layer_type: str, cfg: Config) -> float:
+        return float(self.predict(layer_type, [cfg])[0])
+
+    def evaluate(
+        self, platform: Platform, layer_type: str, test_configs: Sequence[Config]
+    ) -> dict[str, float]:
+        y_true = platform.measure_many(layer_type, list(test_configs))
+        y_pred = self.predict(layer_type, test_configs)
+        return {"mape": mape(y_true, y_pred), "rmspe": rmspe(y_true, y_pred)}
+
+    # ------------------------------------------------------------ whole network
+    def _layer_times(self, blocks: Sequence[Block]) -> list[list[float]]:
+        """Per-block per-layer times via one batched predict per layer type."""
+        by_type: dict[str, list[Config]] = {}
+        slots: list[list[tuple[str, int]]] = []
+        for block in blocks:
+            block_slots = []
+            for lt, cfg in block.layers:
+                batch = by_type.setdefault(lt, [])
+                block_slots.append((lt, len(batch)))
+                batch.append(cfg)
+            slots.append(block_slots)
+        preds = {lt: self.predict(lt, cfgs) for lt, cfgs in by_type.items()}
+        return [[float(preds[lt][i]) for lt, i in block_slots] for block_slots in slots]
+
+    def _combine(self, block: Block, times: Sequence[float]) -> float:
+        if block.kind in self.overlap_kinds:
+            t = max(times)  # Eq. 9
+        else:
+            t = sum(times) - self.launch_overhead_s * max(0, len(times) - 1)
+            if block.kind in self.fusing:
+                t = t - self.fusing[block.kind](block)  # Eq. 10/11
+        return max(t, self.launch_overhead_s if times else 0.0)
+
+    def predict_block(self, block: Block) -> float:
+        return self._combine(block, self._layer_times([block])[0])
+
+    def predict_network(self, blocks: Sequence[Block]) -> float:
+        """Eq. 12 with one batched forest pass per layer type."""
+        all_times = self._layer_times(blocks)
+        return float(
+            sum(self._combine(b, t) * b.repeat for b, t in zip(blocks, all_times))
+        )
+
+    # ------------------------------------------------------------ persistence
+    def save(self, hub, platform_name: str | None = None) -> None:
+        """Persist every layer estimator and the combination params (Eq. 9-11)."""
+        name = platform_name or self.platform_name or "default"
+        for est in self.estimators.values():
+            hub.save(name, est)
+        hub.save_oracle_meta(
+            name,
+            {
+                "fusing": {
+                    kind: {"w": fm.w, "c": fm.c, "n_fit": fm.n_fit}
+                    for kind, fm in self.fusing.items()
+                },
+                "overlap_kinds": sorted(self.overlap_kinds),
+                "launch_overhead_s": self.launch_overhead_s,
+            },
+        )
+
+    @classmethod
+    def load(
+        cls,
+        hub,
+        platform_name: str,
+        layer_types: Sequence[str] | None = None,
+        **kwargs,
+    ) -> "PerfOracle":
+        """Reload a persisted oracle; inverse of :meth:`save`.
+
+        Combination params (fusing models, overlap kinds, launch overhead)
+        come back from the hub's oracle meta; explicit ``kwargs`` win.
+        """
+        if layer_types is None:
+            ests = hub.load_all(platform_name)
+        else:
+            ests = {lt: hub.load(platform_name, lt) for lt in layer_types}
+        if not ests:
+            raise FileNotFoundError(
+                f"no persisted estimators for platform {platform_name!r} in {hub.directory}"
+            )
+        meta = hub.load_oracle_meta(platform_name)
+        restored = {
+            "fusing": {
+                kind: FusingModel(w=fm["w"], c=fm["c"], n_fit=fm.get("n_fit", 0))
+                for kind, fm in meta.get("fusing", {}).items()
+            },
+            "overlap_kinds": frozenset(meta.get("overlap_kinds", ())),
+            "launch_overhead_s": meta.get("launch_overhead_s", 0.0),
+        }
+        restored.update(kwargs)
+        return cls(estimators=ests, platform_name=platform_name, **restored)

@@ -6,4 +6,10 @@ PR mapping at query time -> building-block / whole-network combination.
 
 Submodules: steps, prs, forest, sweeps, estimator, blocks, network, advisor.
 (Imported lazily by users to avoid import cycles with repro.accelerators.)
+
+The public entry point to this pipeline is :mod:`repro.api`
+(``CampaignSpec`` / ``Campaign`` / ``PerfOracle`` / ``EstimatorHub``), which
+adds measurement caching, step-width reuse, and estimator persistence.
+``estimator.build_estimator``, ``estimator.sampling_curve`` and
+``blocks.NetworkEstimator`` remain as deprecated shims.
 """

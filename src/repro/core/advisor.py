@@ -8,17 +8,26 @@ dry-run).  The advisor instead *estimates* every candidate's step time from
 the PR-trained layer models in milliseconds and returns a ranking; only the
 winner needs a compile.
 
-``autotune`` returns candidates sorted by estimated step time.
+``autotune`` returns candidates sorted by estimated step time.  It accepts
+anything with a ``predict_network(blocks) -> float`` method — canonically a
+:class:`repro.api.PerfOracle` (e.g. from ``Campaign.run()`` or reloaded via
+``PerfOracle.load``); the deprecated ``NetworkEstimator`` shim still works.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Protocol, Sequence
 
-from repro.core.blocks import NetworkEstimator
+from repro.core.blocks import Block
 from repro.core.network import decompose
 from repro.models.config import InputShape, ModelConfig
+
+
+class NetworkPredictor(Protocol):
+    """Structural type served by PerfOracle and NetworkEstimator alike."""
+
+    def predict_network(self, blocks: Sequence[Block]) -> float: ...
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,7 +52,7 @@ def default_candidates(chips: int = 256) -> list[Candidate]:
 
 
 def estimate_candidate(
-    estimator: NetworkEstimator,
+    estimator: NetworkPredictor,
     cfg: ModelConfig,
     shape: InputShape,
     cand: Candidate,
@@ -59,7 +68,7 @@ def estimate_candidate(
 
 
 def autotune(
-    estimator: NetworkEstimator,
+    estimator: NetworkPredictor,
     cfg: ModelConfig,
     shape: InputShape,
     candidates: Sequence[Candidate] | None = None,

@@ -103,7 +103,15 @@ def fit_fusing_model(
 
 @dataclasses.dataclass
 class NetworkEstimator:
-    """Whole-network estimator: per-layer forests + per-block combination."""
+    """Whole-network estimator: per-layer forests + per-block combination.
+
+    .. deprecated::
+        Thin shim kept for backward compatibility; prediction delegates to
+        :class:`repro.api.oracle.PerfOracle`, whose batched ``predict`` is the
+        uniform query path (one forest pass per layer type, not per layer).
+        New code should construct a ``PerfOracle`` directly (e.g. via
+        ``Campaign.run()``).
+    """
 
     estimators: Mapping[str, LayerEstimator]
     fusing: Mapping[str, FusingModel] = dataclasses.field(default_factory=dict)
@@ -113,18 +121,21 @@ class NetworkEstimator:
     #: it once, but the summed single-layer estimates include it per layer
     launch_overhead_s: float = 0.0
 
+    def _oracle(self):
+        from repro.api.oracle import PerfOracle
+
+        return PerfOracle(
+            estimators=self.estimators,
+            fusing=self.fusing,
+            overlap_kinds=self.overlap_kinds,
+            launch_overhead_s=self.launch_overhead_s,
+        )
+
     def predict_block(self, block: Block) -> float:
-        times = [self.estimators[lt].predict_one(cfg) for lt, cfg in block.layers]
-        if block.kind in self.overlap_kinds:
-            t = max(times)  # Eq. 9
-        else:
-            t = sum(times) - self.launch_overhead_s * max(0, len(times) - 1)
-            if block.kind in self.fusing:
-                t = t - self.fusing[block.kind](block)  # Eq. 10
-        return max(t, self.launch_overhead_s if times else 0.0)
+        return self._oracle().predict_block(block)
 
     def predict_network(self, blocks: Sequence[Block]) -> float:
-        return float(sum(self.predict_block(b) * b.repeat for b in blocks))  # Eq. 12
+        return self._oracle().predict_network(blocks)  # Eq. 9-12
 
     def evaluate_networks(
         self, platform: Platform, networks: Sequence[Sequence[Block]]

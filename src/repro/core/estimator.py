@@ -1,22 +1,26 @@
 """Single-layer execution-time estimators (Sec. 3.3 of the paper).
 
-``build_estimator`` implements the full pipeline of Fig. 1 for one layer type:
-determine PRs (per knowledge tier), sample benchmark points (from the PR set,
-or randomly for the baseline comparison), measure them on the platform, and
-train a Random-Forest regressor.  At query time a configuration is first
-snapped to its PR (Eq. 7/8) and then predicted.
+:class:`LayerEstimator` is the trained artifact: forest + step widths +
+parameter space.  At query time a configuration is first snapped to its PR
+(Eq. 7/8) and then predicted.
+
+.. deprecated::
+    ``build_estimator`` and ``sampling_curve`` are kept as thin shims for
+    backward compatibility.  New code should go through :mod:`repro.api`
+    (``CampaignSpec`` / ``Campaign`` / ``PerfOracle``), which adds measurement
+    caching, step-width reuse, and estimator persistence on top of the same
+    pipeline.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Mapping, Sequence
 
 import numpy as np
 
 from repro.accelerators.base import Platform
-from repro.core import prs, sweeps
+from repro.core import prs
 from repro.core.features import derived_features
 from repro.core.forest import RandomForestRegressor, mape, rmspe
 
@@ -71,7 +75,7 @@ def build_estimator(
     forest_kwargs: dict | None = None,
     widths: Mapping[str, int] | None = None,
 ) -> LayerEstimator:
-    """Train a single-layer estimator.
+    """Deprecated shim -- delegates to :func:`repro.api.train_layer_estimator`.
 
     sampling:
       * "pr"          -- sample from the PR set (the paper's method),
@@ -79,42 +83,18 @@ def build_estimator(
                          (the paper's baseline comparison),
       * "random_pr"   -- random sampling *of PR points* (ablation).
     """
-    rng = np.random.default_rng(seed)
-    space = platform.param_space(layer_type)
-    n_sweep = 0
-    if widths is None:
-        if sampling == "random":
-            widths = {p: 1 for p in space.params}
-        else:
-            widths, _, n_sweep = sweeps.discover_step_widths(
-                platform, layer_type, threshold_linear
-            )
-    if sampling in ("pr", "random_pr"):
-        configs = prs.sample_pr_configs(space, widths, n_samples, rng)
-    elif sampling == "random":
-        configs = prs.sample_random_configs(space, n_samples, rng)
-    else:
-        raise ValueError(sampling)
+    from repro.api.campaign import train_layer_estimator
 
-    y, mean_t = platform.timed_measure_many(layer_type, configs)
-    fk = dict(n_estimators=32, max_depth=30, min_samples_leaf=1, seed=seed)
-    fk.update(forest_kwargs or {})
-    forest = RandomForestRegressor(**fk)
-    est = LayerEstimator(
-        layer_type=layer_type,
-        params=space.params,
-        widths=widths,
-        space=space,
-        forest=forest,
-        n_train=n_samples,
-        n_sweep=n_sweep,
-        mean_measure_seconds=mean_t,
+    return train_layer_estimator(
+        platform,
+        layer_type,
+        n_samples,
         sampling=sampling,
+        seed=seed,
+        threshold_linear=threshold_linear,
+        forest_kwargs=forest_kwargs,
+        widths=widths,
     )
-    X = est._features(configs, snap=(sampling != "random"))
-    target = np.log(np.asarray(y)) if est.log_target else np.asarray(y)
-    forest.fit(X, target)
-    return est
 
 
 def sampling_curve(
@@ -125,12 +105,14 @@ def sampling_curve(
     sampling: str = "pr",
     seed: int = 0,
 ) -> list[dict[str, float]]:
-    """MAPE/RMSPE as a function of training-set size (Figs. 4-7)."""
-    out = []
-    for n in sizes:
-        t0 = time.perf_counter()
-        est = build_estimator(platform, layer_type, n, sampling=sampling, seed=seed)
-        metrics = est.evaluate(platform, test_configs)
-        metrics.update(n=n, sampling=sampling, train_wall_s=time.perf_counter() - t0)
-        out.append(metrics)
-    return out
+    """MAPE/RMSPE as a function of training-set size (Figs. 4-7).
+
+    Deprecated shim -- delegates to :meth:`repro.api.Campaign.sampling_curve`,
+    which discovers step widths once and reuses them for every size (the old
+    implementation re-swept the platform at each size).
+    """
+    from repro.api.campaign import Campaign, CampaignSpec
+
+    spec = CampaignSpec(platform=platform.name, sampling=sampling, seed=seed)
+    campaign = Campaign(spec, platform=platform)
+    return campaign.sampling_curve(layer_type, sizes, test_configs, sampling=sampling, seed=seed)

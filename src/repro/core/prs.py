@@ -61,15 +61,31 @@ def count_pr_configs(space: ParamSpace, widths: Mapping[str, int]) -> int:
 
 
 def map_to_pr(cfg: Config, widths: Mapping[str, int], space: ParamSpace | None = None) -> Config:
-    """Eq. 7/8: snap every parameter to the next-larger multiple of its width."""
+    """Eq. 7/8: snap every parameter to the next-larger multiple of its width.
+
+    With a ``space`` given, every quantized (``w > 1``) parameter lands on
+    the PR grid of its range, i.e. ``map_to_pr(cfg, W, S)[p] in
+    pr_values(lo, hi, W[p])`` — even for out-of-range query values, and in
+    the degenerate cases where the range holds no multiple of the width
+    (``hi < w``, or ``lo`` past the last in-range multiple), whose only
+    representative is ``hi``.  Width-1 (linear) parameters pass through
+    unsnapped.
+    """
     out = dict(cfg)
     for p, w in widths.items():
         if p in out and w > 1:
             snapped = int(math.ceil(out[p] / w)) * w
             if space is not None and p in space.ranges:
                 lo, hi = space.ranges[p]
-                snapped = min(snapped, int(math.floor(hi / w)) * w) if hi >= w else hi
-                snapped = max(snapped, w)
+                top = int(math.floor(hi / w)) * w  # largest multiple of w <= hi
+                first = max(w, int(math.ceil(lo / w)) * w)  # smallest in-range PR
+                if top < first:
+                    # No multiple of w inside [lo, hi]: hi is the sole PR.
+                    snapped = hi
+                else:
+                    # Clamp into [first, top] so even out-of-range query
+                    # values land on the grid (first == w for in-range ones).
+                    snapped = min(max(snapped, first), top)
             out[p] = snapped
     return out
 

@@ -5,6 +5,14 @@ platform's default configuration) while holding every other parameter at its
 default.  Stride-1 matters: a coarser stride can alias away small step widths
 (e.g. the TPU sublane width of 8).  The window length just needs to cover a
 handful of steps for the peak-distance estimate to be robust.
+
+Sweeping is the most measurement-hungry phase of the pipeline; run it through
+:mod:`repro.api` (``Campaign.discover_widths``) to get memoization — a shared
+``MeasurementCache`` deduplicates sweep points against training/evaluation
+points and remembers discovered widths per (platform, layer type), so size
+scans and repeated campaigns never re-sweep.  The functions below stay as the
+low-level building blocks and operate on whatever ``Platform`` they are given
+(cached or not).
 """
 
 from __future__ import annotations

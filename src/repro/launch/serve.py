@@ -2,6 +2,12 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --reduced \
       --batch 4 --prompt-len 32 --gen 16
+
+``--estimate`` additionally prints a PR-oracle prediction of the per-token
+decode step time on the TPU-v5e platform *before* anything is compiled —
+the serving analogue of the advisor use-case.  ``--hub-dir`` reloads a
+persisted oracle (see repro.api.EstimatorHub) instead of training one
+in-process; ``--estimate-only`` skips the real run entirely.
 """
 
 from __future__ import annotations
@@ -45,6 +51,39 @@ def generate(cfg, params, prompts: np.ndarray, gen_len: int, extras: dict | None
     return jnp.stack(out, axis=1)
 
 
+def estimate_decode_step(cfg, batch: int, seq_len: int,
+                         hub_dir: str | None = None, n_samples: int = 400) -> float:
+    """PR-oracle estimate of one decode step's time on the TPU-v5e platform.
+
+    Loads a persisted oracle from ``hub_dir`` when one is available there,
+    otherwise trains a small campaign in-process (and persists it to
+    ``hub_dir`` for next time, if given).
+    """
+    from repro.api import Campaign, CampaignSpec, EstimatorHub, PerfOracle
+    from repro.core.network import decompose
+    from repro.models.config import InputShape
+
+    layer_types = ("dense", "attention_decode", "moe_gemm", "ssd_scan", "embed")
+    platform_name = "tpu_v5e[gray]"
+    oracle = None
+    if hub_dir:
+        hub = EstimatorHub(hub_dir)
+        if all(hub.has(platform_name, lt) for lt in layer_types):
+            oracle = PerfOracle.load(hub, platform_name, layer_types)
+    if oracle is None:
+        spec = CampaignSpec(
+            platform="tpu_v5e",
+            layer_types=layer_types,
+            n_samples=n_samples,
+            platform_kwargs={"knowledge": "gray", "noise": 0.001},
+            hub_dir=hub_dir,
+        )
+        oracle = Campaign(spec).run()
+    shape = InputShape(name="serve", seq_len=seq_len, global_batch=batch, kind="decode")
+    blocks = decompose(cfg, shape, dp=1, tp=1)
+    return oracle.predict_network(blocks)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -52,11 +91,26 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--estimate", action="store_true",
+                    help="print a PR-oracle decode step-time estimate first")
+    ap.add_argument("--estimate-only", action="store_true",
+                    help="estimate and exit without compiling/running the model")
+    ap.add_argument("--hub-dir", default=None,
+                    help="EstimatorHub directory to reload/persist the oracle")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+    if args.estimate or args.estimate_only:
+        t_step = estimate_decode_step(
+            cfg, args.batch, args.prompt_len + args.gen, hub_dir=args.hub_dir
+        )
+        print(f"oracle estimate (tpu_v5e[gray], dp=1 tp=1): "
+              f"{t_step*1e3:.3f} ms/decode-step "
+              f"(~{args.batch / max(t_step, 1e-12):.0f} tok/s)")
+        if args.estimate_only:
+            return
     rules = single_device_rules()
     with use_rules(rules):
         params = T.init_params(cfg, jax.random.PRNGKey(0))

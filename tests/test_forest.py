@@ -1,7 +1,7 @@
 """Random-Forest regression (from scratch)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core.forest import RandomForestRegressor, mape, rmspe
 
@@ -48,16 +48,3 @@ def test_metrics():
     yp = np.array([1.1, 1.8, 4.0])
     assert abs(mape(y, yp) - np.mean([10, 10, 0])) < 1e-9
     assert rmspe(y, yp) >= mape(y, yp) - 1e-9
-
-
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 1000))
-def test_property_no_extrapolation(seed):
-    """Forests only predict within the training range (paper Sec. 3.3)."""
-    rng = np.random.default_rng(seed)
-    X = rng.uniform(0, 10, size=(200, 2))
-    y = X[:, 0] + X[:, 1]
-    f = RandomForestRegressor(n_estimators=8, seed=seed).fit(X, y)
-    X_out = rng.uniform(50, 100, size=(50, 2))  # far outside training
-    yp = f.predict(X_out)
-    assert np.all(yp <= y.max() + 1e-9) and np.all(yp >= y.min() - 1e-9)

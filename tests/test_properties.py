@@ -1,0 +1,83 @@
+"""Hypothesis property tests for prs / steps / forest.
+
+Kept in their own module (the deterministic tests live in test_prs.py,
+test_steps.py, test_forest.py) so that only the property tests skip when
+hypothesis is not installed.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # degrade gracefully when missing
+from hypothesis import given, settings, strategies as st
+
+from repro.core import prs, steps
+from repro.core.forest import RandomForestRegressor
+
+SPACE = prs.ParamSpace(ranges={"C": (1, 56), "K": (1, 56), "W": (3, 256)})
+WIDTHS = {"C": 8, "K": 8, "W": 1}
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    c=st.integers(1, 56),
+    k=st.integers(1, 56),
+    w=st.integers(3, 256),
+)
+def test_property_pr_mapping(c, k, w):
+    cfg = {"C": c, "K": k, "W": w}
+    snapped = prs.map_to_pr(cfg, WIDTHS, SPACE)
+    # idempotent
+    assert prs.map_to_pr(snapped, WIDTHS, SPACE) == snapped
+    # next-larger multiple, within one step
+    assert snapped["C"] >= min(c, snapped["C"])
+    assert snapped["C"] % 8 == 0 and 0 <= snapped["C"] - c < 8 or snapped["C"] == 56
+    # linear params untouched
+    assert snapped["W"] == w
+
+
+@settings(max_examples=300, deadline=None)
+@given(
+    lo=st.integers(1, 64),
+    span=st.integers(0, 200),
+    w=st.integers(1, 32),
+    frac=st.floats(0.0, 1.0),
+)
+def test_property_map_to_pr_lands_on_pr_grid(lo, span, w, frac):
+    """map_to_pr always lands on a pr_values grid point, for every range/width
+    combination — including the degenerate hi < w and lo-past-last-multiple
+    cases whose only representative is hi."""
+    hi = lo + span
+    space = prs.ParamSpace(ranges={"p": (lo, hi)})
+    v = lo + int(round(frac * span))
+    snapped = prs.map_to_pr({"p": v}, {"p": w}, space)["p"]
+    assert snapped in set(prs.pr_values(lo, hi, w).tolist())
+
+
+def _staircase(x, width, step_height=1.0, base=10.0):
+    return base + step_height * np.ceil(x / width)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    width=st.sampled_from([2, 4, 8, 16, 32, 64]),
+    base=st.floats(1.0, 1e3),
+    height=st.floats(0.5, 10.0),
+)
+def test_property_recovers_planted_width(width, base, height):
+    x = np.arange(1, 7 * width + 1)
+    y = _staircase(x, width, step_height=height, base=base)
+    assert steps.find_step_width(x, y) == width
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_property_no_extrapolation(seed):
+    """Forests only predict within the training range (paper Sec. 3.3)."""
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(0, 10, size=(200, 2))
+    y = X[:, 0] + X[:, 1]
+    f = RandomForestRegressor(n_estimators=8, seed=seed).fit(X, y)
+    X_out = rng.uniform(50, 100, size=(50, 2))  # far outside training
+    yp = f.predict(X_out)
+    assert np.all(yp <= y.max() + 1e-9) and np.all(yp >= y.min() - 1e-9)

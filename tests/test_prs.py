@@ -2,7 +2,6 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.accelerators import UltraTrailSim
 from repro.core import prs
@@ -53,19 +52,12 @@ def test_configs_to_matrix_order():
     assert X.tolist() == [[1.0, 2.0, 3.0]]
 
 
-@settings(max_examples=50, deadline=None)
-@given(
-    c=st.integers(1, 56),
-    k=st.integers(1, 56),
-    w=st.integers(3, 256),
-)
-def test_property_pr_mapping(c, k, w):
-    cfg = {"C": c, "K": k, "W": w}
-    snapped = prs.map_to_pr(cfg, WIDTHS, SPACE)
-    # idempotent
-    assert prs.map_to_pr(snapped, WIDTHS, SPACE) == snapped
-    # next-larger multiple, within one step
-    assert snapped["C"] >= min(c, snapped["C"])
-    assert snapped["C"] % 8 == 0 and 0 <= snapped["C"] - c < 8 or snapped["C"] == 56
-    # linear params untouched
-    assert snapped["W"] == w
+def test_map_to_pr_degenerate_ranges():
+    # hi < w: the only representative is hi itself.
+    space = prs.ParamSpace(ranges={"p": (1, 5)})
+    assert prs.map_to_pr({"p": 3}, {"p": 8}, space)["p"] == 5
+    assert list(prs.pr_values(1, 5, 8)) == [5]
+    # lo beyond the last in-range multiple of w: again hi.
+    space = prs.ParamSpace(ranges={"p": (57, 60)})
+    assert prs.map_to_pr({"p": 58}, {"p": 8}, space)["p"] == 60
+    assert list(prs.pr_values(57, 60, 8)) == [60]

@@ -2,7 +2,6 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import steps
 
@@ -75,15 +74,3 @@ def test_detect_pr_points():
     x = np.arange(1, 33)
     prs = steps.detect_pr_points(x, staircase(x, 8), 8)
     assert list(prs) == [8, 16, 24, 32]
-
-
-@settings(max_examples=30, deadline=None)
-@given(
-    width=st.sampled_from([2, 4, 8, 16, 32, 64]),
-    base=st.floats(1.0, 1e3),
-    height=st.floats(0.5, 10.0),
-)
-def test_property_recovers_planted_width(width, base, height):
-    x = np.arange(1, 7 * width + 1)
-    y = staircase(x, width, step_height=height, base=base)
-    assert steps.find_step_width(x, y) == width
