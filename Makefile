@@ -1,13 +1,16 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench quickstart
+.PHONY: test bench-smoke bench bench-engine quickstart
 
 test:
 	$(PYTHON) -m pytest -x -q
 
 bench-smoke:
 	$(PYTHON) -m benchmarks.run table1 fig2
+
+bench-engine:
+	$(PYTHON) -m benchmarks.bench_engine
 
 bench:
 	$(PYTHON) -m benchmarks.run

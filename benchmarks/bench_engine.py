@@ -1,0 +1,190 @@
+"""End-to-end throughput of the columnar config engine vs the scalar path.
+
+Measures the config path (PR sampling -> cache-partitioned measurement ->
+PR snap -> feature build) and the oracle query path (snap -> features ->
+forest traversal) on ``CampaignSpec(platform="tpu_v5e", n_samples=2000)``,
+once through the columnar :class:`~repro.core.batch.ConfigBatch` engine and
+once through a frozen copy of the pre-refactor per-config scalar loops.
+
+Asserts the two paths produce bitwise-identical configs, measurements and
+features (the refactor's hard invariant), then writes ``BENCH_engine.json``
+so future PRs can track the throughput trajectory::
+
+    PYTHONPATH=src python -m benchmarks.bench_engine
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.api import CachedPlatform, Campaign, CampaignSpec, get_platform
+from repro.core import prs
+from repro.core.batch import ConfigBatch
+from repro.core.features import derived_features
+
+PLATFORM = "tpu_v5e"
+LAYER_TYPE = "dense"
+N_SAMPLES = 2000
+N_QUERIES = 2000
+SEED = 0
+OUT_PATH = "BENCH_engine.json"
+
+
+# ------------------------------------------------------- frozen scalar reference
+def _scalar_sample_pr(space, widths, n, rng):
+    per_param = {p: prs.pr_values(lo, hi, widths.get(p, 1)) for p, (lo, hi) in space.ranges.items()}
+    out = []
+    for _ in range(n):
+        cfg = {p: int(rng.choice(vals)) for p, vals in per_param.items()}
+        out.append(space.with_fixed(cfg))
+    return out
+
+
+def _scalar_features(est, configs):
+    snapped = [prs.map_to_pr(c, est.widths, est.space) for c in configs]
+    base = prs.configs_to_matrix(snapped, est.params)
+    extra = np.array(
+        [list(derived_features(est.layer_type, c).values()) for c in snapped],
+        dtype=np.float64,
+    )
+    return base if extra.size == 0 else np.concatenate([base, extra], axis=1)
+
+
+def _scalar_config_path(platform, est, space, widths):
+    """Pre-refactor pipeline: per-config loops at every stage."""
+    rng = np.random.default_rng(SEED)
+    cached = CachedPlatform(platform)
+    configs = _scalar_sample_pr(space, widths, N_SAMPLES, rng)
+    y = np.array([cached.measure(LAYER_TYPE, c) for c in configs], dtype=np.float64)
+    X = _scalar_features(est, configs)
+    return configs, y, X
+
+
+def _batched_config_path(platform, est, space, widths):
+    """The columnar engine: one batch end to end."""
+    rng = np.random.default_rng(SEED)
+    cached = CachedPlatform(platform)
+    batch = prs.sample_pr_batch(space, widths, N_SAMPLES, rng)
+    y = cached.measure_batch(LAYER_TYPE, batch)
+    X = est._features(batch, snap=True)
+    return batch, y, X
+
+
+def _scalar_forest_predict(est, X):
+    acc = np.zeros(X.shape[0], dtype=np.float64)
+    for t in est.forest._trees:
+        acc += t.predict(X)
+    y = acc / len(est.forest._trees)
+    return np.exp(y) if est.log_target else y
+
+
+def _time(fn, repeats=3):
+    best = float("inf")
+    result = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        result = fn()
+        best = min(best, time.perf_counter() - t0)
+    return result, best
+
+
+def main() -> dict:
+    spec = CampaignSpec(
+        platform=PLATFORM,
+        layer_types=(LAYER_TYPE,),
+        n_samples=N_SAMPLES,
+        seed=SEED,
+        forest_kwargs={"n_estimators": 16, "max_depth": 16},
+    )
+    t0 = time.perf_counter()
+    campaign = Campaign(spec)
+    campaign.run()
+    campaign_run_s = time.perf_counter() - t0
+    est = campaign.estimators[LAYER_TYPE]
+    raw = get_platform(PLATFORM)
+    space = raw.param_space(LAYER_TYPE)
+    widths = dict(est.widths)
+
+    # ---- config path: sample -> measure (cached) -> snap -> features
+    (s_cfgs, s_y, s_X), scalar_s = _time(lambda: _scalar_config_path(raw, est, space, widths))
+    (b_batch, b_y, b_X), batched_s = _time(lambda: _batched_config_path(raw, est, space, widths))
+
+    # hard invariant: both engines produce identical numbers
+    assert b_batch.to_dicts() == s_cfgs, "training configs diverge"
+    assert np.array_equal(b_y, s_y), "measurements diverge"
+    assert np.array_equal(b_X, s_X), "feature matrices diverge"
+
+    # ---- oracle query path: snap -> features -> forest traversal
+    q_rng = np.random.default_rng(1)
+    queries = prs.sample_random_batch(space, N_QUERIES, q_rng)
+    query_dicts = queries.to_dicts()
+
+    def scalar_oracle():
+        X = _scalar_features(est, query_dicts)
+        return _scalar_forest_predict(est, X)
+
+    s_pred, scalar_oracle_s = _time(scalar_oracle)
+    b_pred, batched_oracle_s = _time(lambda: est.predict(queries))
+    assert np.array_equal(s_pred, b_pred), "oracle predictions diverge"
+
+    report = {
+        "spec": {
+            "platform": PLATFORM,
+            "layer_type": LAYER_TYPE,
+            "n_samples": N_SAMPLES,
+            "n_queries": N_QUERIES,
+            "seed": SEED,
+        },
+        "scalar": {
+            "config_path_s": scalar_s,
+            "configs_per_s": N_SAMPLES / scalar_s,
+            "oracle_s": scalar_oracle_s,
+            "oracle_queries_per_s": N_QUERIES / scalar_oracle_s,
+        },
+        "batched": {
+            "config_path_s": batched_s,
+            "configs_per_s": N_SAMPLES / batched_s,
+            "oracle_s": batched_oracle_s,
+            "oracle_queries_per_s": N_QUERIES / batched_oracle_s,
+            "campaign_run_s": campaign_run_s,
+        },
+        "speedup": {
+            "config_path": scalar_s / batched_s,
+            "oracle": scalar_oracle_s / batched_oracle_s,
+        },
+        "parity": True,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=1)
+
+    emit("engine.config_path.scalar", scalar_s / N_SAMPLES * 1e6,
+         f"configs_per_s={N_SAMPLES / scalar_s:.0f}")
+    emit("engine.config_path.batched", batched_s / N_SAMPLES * 1e6,
+         f"configs_per_s={N_SAMPLES / batched_s:.0f}")
+    emit("engine.oracle.scalar", scalar_oracle_s / N_QUERIES * 1e6,
+         f"queries_per_s={N_QUERIES / scalar_oracle_s:.0f}")
+    emit("engine.oracle.batched", batched_oracle_s / N_QUERIES * 1e6,
+         f"queries_per_s={N_QUERIES / batched_oracle_s:.0f}")
+    emit("engine.speedup", 0.0,
+         f"config_path={scalar_s / batched_s:.1f}x oracle={scalar_oracle_s / batched_oracle_s:.1f}x")
+    # Parity above is the hard invariant; the throughput floor guards against
+    # accidental de-vectorization.  Contended CI runners can depress wall-clock
+    # ratios, so the floor is tunable there (REPRO_BENCH_MIN_SPEEDUP).
+    min_speedup = float(os.environ.get("REPRO_BENCH_MIN_SPEEDUP", "10.0"))
+    if scalar_s / batched_s < min_speedup:
+        # RuntimeError (not SystemExit) so benchmarks/run.py's per-suite
+        # error handling reports the failure and keeps the harness running.
+        raise RuntimeError(
+            f"columnar engine regression: config-path speedup "
+            f"{scalar_s / batched_s:.1f}x < {min_speedup:g}x"
+        )
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ import traceback
 
 from benchmarks import (
     advisor_bench,
+    bench_engine,
     fig2_sweeps,
     fig4to7_curves,
     roofline_report,
@@ -31,6 +32,7 @@ SUITES = {
     "table3": table3_sota.main,
     "roofline": roofline_report.main,
     "advisor": advisor_bench.main,
+    "engine": bench_engine.main,
 }
 
 

@@ -17,6 +17,7 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
+from repro.core.batch import ConfigBatch
 from repro.core.prs import Config, ParamSpace
 
 
@@ -63,20 +64,53 @@ class Platform(abc.ABC):
     def measure(self, layer_type: str, cfg: Config) -> float:
         """Execution time in seconds of a single layer configuration."""
 
-    def measure_many(self, layer_type: str, configs: Sequence[Config]) -> np.ndarray:
-        return np.array([self.measure(layer_type, c) for c in configs], dtype=np.float64)
+    def measure_batch(self, layer_type: str, batch: ConfigBatch) -> np.ndarray:
+        """Execution times (seconds) of a whole configuration batch.
 
-    def measure_block(self, layers: Sequence[tuple[str, Config]]) -> float:
+        This is the extension point for vectorized timing models: the built-in
+        analytical platforms override it with columnar array math.  The default
+        is a scalar ``measure`` loop, so third-party platforms that only
+        implement ``measure`` keep working on the batched pipeline.
+        """
+        return np.array(
+            [self.measure(layer_type, cfg) for cfg in batch.to_dicts()],
+            dtype=np.float64,
+        )
+
+    def measure_many(
+        self, layer_type: str, configs: Sequence[Config] | ConfigBatch
+    ) -> np.ndarray:
+        """Batched measurement of dict configs (or a ready ConfigBatch).
+
+        Homogeneous dict lists are columnarised and routed through
+        ``measure_batch``; heterogeneous key sets degrade to a scalar loop.
+        """
+        if isinstance(configs, ConfigBatch):
+            return self.measure_batch(layer_type, configs)
+        configs = list(configs)
+        if not configs:
+            return np.zeros(0, dtype=np.float64)
+        try:
+            batch = ConfigBatch.from_dicts(configs)
+        except ValueError:
+            return np.array(
+                [self.measure(layer_type, c) for c in configs], dtype=np.float64
+            )
+        return self.measure_batch(layer_type, batch)
+
+    def measure_block(self, layers: Sequence[tuple[str, Config]], **kwargs) -> float:
         """Execution time of a multi-layer building block run as one unit.
 
         Default: no fusion/overlap -> sum of single-layer times.  Platforms
-        with overlapping functional units / double buffering override this.
+        with overlapping functional units / double buffering override this
+        (``**kwargs`` carries platform-specific block context, e.g. the TPU's
+        in-flight collective bytes).
         """
         return float(sum(self.measure(lt, cfg) for lt, cfg in layers))
 
     # ---- bookkeeping ---------------------------------------------------------------
     def timed_measure_many(
-        self, layer_type: str, configs: Sequence[Config]
+        self, layer_type: str, configs: Sequence[Config] | ConfigBatch
     ) -> tuple[np.ndarray, float]:
         """(times, mean wall-clock seconds per benchmark point) -- Table 1 column."""
         t0 = time.perf_counter()

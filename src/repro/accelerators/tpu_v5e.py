@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.accelerators.base import Platform
 from repro.api.registry import register_platform
+from repro.core.batch import ConfigBatch
 from repro.core.prs import Config, ParamSpace
 
 
@@ -60,6 +61,11 @@ V5E = V5EChip()
 
 def _pad(v: int, m: int) -> int:
     return int(math.ceil(v / m)) * m
+
+
+def _pad_arr(v: np.ndarray, m: int) -> np.ndarray:
+    # Integer ceildiv == the scalar float-ceil formula for all v < 2**53.
+    return -(-v // m) * m
 
 
 class TPUv5eSim(Platform):
@@ -225,12 +231,79 @@ class TPUv5eSim(Platform):
         rng = np.random.default_rng(int.from_bytes(key, "little"))
         return float(rng.lognormal(0.0, self.noise))
 
+    def _terms_batch(
+        self, layer_type: str, batch: ConfigBatch
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Columnar ``_terms``: (flop_seconds, hbm_seconds) per row.
+
+        Every expression mirrors the scalar model operation for operation
+        (same padding, same int/float promotion order), so the result is
+        bitwise-identical to looping ``_terms`` over the rows.
+        """
+        c = self.chip
+        col = batch.column
+        get = batch.get
+        if layer_type == "dense":
+            m = _pad_arr(col("tokens"), c.sublane)
+            k = _pad_arr(col("d_in"), c.mxu)
+            n = _pad_arr(col("d_out"), c.mxu)
+            flops = 2.0 * m * k * n
+            bytes_ = 2.0 * (m * k + m * n + k * n)
+        elif layer_type == "attention_prefill":
+            b, h, dh = col("B"), col("H"), _pad_arr(col("Dh"), c.mxu)
+            kvh = np.maximum(1, h // get("kv_ratio", self.kv_ratio))
+            s = _pad_arr(col("S"), c.mxu)
+            flops = 2.0 * b * h * s * s * dh
+            bytes_ = 2.0 * (b * h * s * dh + 2 * b * kvh * s * dh + b * h * s * dh)
+        elif layer_type == "attention_decode":
+            b = _pad_arr(col("B"), c.sublane)
+            h, dh = col("H"), _pad_arr(col("Dh"), c.mxu)
+            kvh = np.maximum(1, h // get("kv_ratio", self.kv_ratio))
+            s = _pad_arr(col("S_kv"), c.kv_page)
+            flops = 4.0 * b * h * s * dh
+            bytes_ = 2.0 * (2 * b * kvh * s * dh + 2 * b * h * dh)
+        elif layer_type == "moe_gemm":
+            e, topk = col("E"), col("topk")
+            per_expert = _pad_arr(-(-(col("tokens") * topk) // e), c.sublane)
+            dm = _pad_arr(col("d_model"), c.mxu)
+            df = _pad_arr(col("d_ff"), c.mxu)
+            flops = 3.0 * 2.0 * e * per_expert * dm * df
+            bytes_ = 2.0 * (3 * e * dm * df + e * per_expert * (2 * dm + 2 * df))
+        elif layer_type == "ssd_scan":
+            b, h = col("B"), _pad_arr(col("H"), c.sublane)
+            p = _pad_arr(col("P"), c.mxu)
+            n = _pad_arr(col("N"), c.mxu)
+            s = _pad_arr(col("S"), c.ssd_chunk)
+            q = c.ssd_chunk
+            nchunks = s // q
+            per_chunk = 2.0 * q * q * n + 2.0 * q * q * p + 4.0 * q * n * p
+            flops = b * h * nchunks * per_chunk
+            bytes_ = 2.0 * b * s * (h * p * 2 + 2 * n + h)
+        elif layer_type == "embed":
+            t, dm = col("tokens"), col("d_model")
+            flops = np.zeros(len(batch), dtype=np.float64)
+            bytes_ = 2.0 * t * dm * 2 + 4.0 * t
+        else:
+            raise KeyError(layer_type)
+        return flops / c.peak_bf16_flops, bytes_ / c.hbm_bandwidth
+
     def measure(self, layer_type: str, cfg: Config) -> float:
         flop_s, mem_s = self._terms(layer_type, cfg)
         t = max(flop_s, mem_s) + self.chip.launch_overhead_s
         return t * self._noise_factor(layer_type, cfg)
 
-    def measure_block(self, layers, collective_bytes: float = 0.0) -> float:
+    def measure_batch(self, layer_type: str, batch: ConfigBatch) -> np.ndarray:
+        flop_s, mem_s = self._terms_batch(layer_type, batch)
+        t = np.maximum(flop_s, mem_s) + self.chip.launch_overhead_s
+        if self.noise > 0:
+            # The per-config hash seeding is inherently scalar; noisy mode
+            # pays a row loop for the factors only.
+            t = t * np.array(
+                [self._noise_factor(layer_type, cfg) for cfg in batch.to_dicts()]
+            )
+        return np.asarray(t, dtype=np.float64)
+
+    def measure_block(self, layers, collective_bytes: float = 0.0, **kwargs) -> float:
         """Fused multi-layer block: overlapped compute/DMA/ICI (Eq. 9 analog)."""
         flop_s = 0.0
         mem_s = 0.0

@@ -14,8 +14,11 @@ from __future__ import annotations
 
 import math
 
+import numpy as np
+
 from repro.accelerators.base import Platform
 from repro.api.registry import register_platform
+from repro.core.batch import ConfigBatch
 from repro.core.prs import Config, ParamSpace
 
 
@@ -64,6 +67,20 @@ class UltraTrailSim(Platform):
         w_out = max(1, w_out)
         mac_cycles = c_tiles * k_tiles * w_out * cfg["F"]
         # output writeback + bias/requant pass, once per output tile row
+        post_cycles = k_tiles * w_out
+        cycles = mac_cycles + post_cycles + self.OVERHEAD_CYCLES
+        return cycles / self.CLOCK_HZ
+
+    def measure_batch(self, layer_type: str, batch: ConfigBatch) -> np.ndarray:
+        """Columnar cycle model, bitwise-identical to looping ``measure``."""
+        assert layer_type == "conv1d"
+        c_tiles = -(-batch.column("C") // self.ARRAY)
+        k_tiles = -(-batch.column("K") // self.ARRAY)
+        w_out = (
+            batch.column("C_w") + 2 * batch.column("pad") - batch.column("F")
+        ) // batch.column("s") + 1
+        w_out = np.maximum(1, w_out)
+        mac_cycles = c_tiles * k_tiles * w_out * batch.column("F")
         post_cycles = k_tiles * w_out
         cycles = mac_cycles + post_cycles + self.OVERHEAD_CYCLES
         return cycles / self.CLOCK_HZ

@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.accelerators.base import Platform
 from repro.api.registry import register_platform
+from repro.core.batch import ConfigBatch
 from repro.core.prs import Config, ParamSpace
 
 
@@ -68,6 +69,20 @@ class XLACPUPlatform(Platform):
         t = float(np.median(samples))
         self._cache[key] = t
         return t
+
+    def measure_batch(self, layer_type: str, batch: ConfigBatch) -> np.ndarray:
+        """Wall-clock timing cannot vectorize; batch-level dedup is the win.
+
+        Unique rows are timed once each (in first-occurrence order, so the
+        warm-up/measurement sequence matches the scalar loop) and duplicates
+        reuse the measured value.
+        """
+        unique, _, inverse = batch.dedup()
+        y = np.array(
+            [self.measure(layer_type, cfg) for cfg in unique.to_dicts()],
+            dtype=np.float64,
+        )
+        return y[inverse]
 
 
 register_platform("xla_cpu", XLACPUPlatform)

@@ -19,11 +19,13 @@ from repro.api.campaign import Campaign, CampaignSpec, train_layer_estimator
 from repro.api.hub import EstimatorHub
 from repro.api.oracle import PerfOracle
 from repro.api.registry import get_platform, list_platforms, register_platform
+from repro.core.batch import ConfigBatch
 
 __all__ = [
     "CachedPlatform",
     "Campaign",
     "CampaignSpec",
+    "ConfigBatch",
     "EstimatorHub",
     "MeasurementCache",
     "PerfOracle",

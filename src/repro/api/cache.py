@@ -13,7 +13,10 @@ result instead of re-sweeping.
 
 ``CachedPlatform`` wraps any :class:`~repro.accelerators.base.Platform` with
 the cache transparently, so the sweep/training/evaluation code paths need no
-changes to benefit.
+changes to benefit.  Batched measurement goes through ``lookup_many`` /
+``store_many``, which partition a whole :class:`~repro.core.batch.ConfigBatch`
+into hits and misses in one pass so only the miss sub-batch reaches the
+platform's vectorized timing model.
 """
 
 from __future__ import annotations
@@ -26,12 +29,31 @@ from typing import Mapping, Sequence
 import numpy as np
 
 from repro.accelerators.base import Platform
+from repro.core.batch import ConfigBatch
 from repro.core.prs import Config, ParamSpace
 
 
 def config_key(layer_type: str, cfg: Config) -> tuple:
-    """Canonical hashable key for one layer configuration."""
-    return (layer_type, tuple(sorted(cfg.items())))
+    """Canonical hashable key for one layer configuration.
+
+    Values are coerced to plain ``int`` so numpy integers (``np.int64(8)``)
+    and Python ``8`` produce the same key — a config built from ``np.arange``
+    values must hit the entry stored from plain ints.
+    """
+    return (layer_type, tuple(sorted((p, int(v)) for p, v in cfg.items())))
+
+
+def batch_keys(layer_type: str, batch: ConfigBatch) -> list[tuple]:
+    """Row-wise :func:`config_key` tuples for a whole batch, in one pass.
+
+    Sorts the parameter axis once and materialises all row values with a
+    single ``tolist()`` (plain Python ints), instead of building and sorting
+    a dict per row.
+    """
+    order = sorted(range(len(batch.params)), key=lambda j: batch.params[j])
+    sorted_params = tuple(batch.params[j] for j in order)
+    rows = batch.values[:, order].tolist()
+    return [(layer_type, tuple(zip(sorted_params, row))) for row in rows]
 
 
 class MeasurementCache:
@@ -57,6 +79,54 @@ class MeasurementCache:
     def store(self, platform: str, layer_type: str, cfg: Config, seconds: float) -> None:
         self._times[(platform,) + config_key(layer_type, cfg)] = seconds
         self.misses += 1
+
+    # --------------------------------------------------------- batched interface
+    def lookup_many(
+        self, platform: str, layer_type: str, batch: ConfigBatch
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Partition a batch into cache hits and misses in one pass.
+
+        Returns ``(times, miss_rows, miss_map)``:
+
+        * ``times`` — (n,) float64, cached seconds with NaN at missing rows;
+        * ``miss_rows`` — row indices of the *first occurrence* of each
+          distinct missing key (the sub-batch that actually needs measuring);
+        * ``miss_map`` — (n,) int64 mapping every missing row to its key's
+          position in ``miss_rows`` (−1 for cached rows), so measured values
+          can be scattered back to duplicates without re-probing.
+
+        Hit accounting matches a scalar measure/store replay: rows that
+        duplicate an in-batch miss count as hits, because the transaction
+        stores the first occurrence before the duplicate would be probed.
+        """
+        keys = batch_keys(layer_type, batch)
+        n = len(keys)
+        times = np.full(n, np.nan, dtype=np.float64)
+        miss_map = np.full(n, -1, dtype=np.int64)
+        miss_rows: list[int] = []
+        first_pos: dict[tuple, int] = {}
+        for i, k in enumerate(keys):
+            t = self._times.get((platform,) + k)
+            if t is not None:
+                times[i] = t
+            else:
+                pos = first_pos.get(k)
+                if pos is None:
+                    pos = len(miss_rows)
+                    first_pos[k] = pos
+                    miss_rows.append(i)
+                miss_map[i] = pos
+        self.hits += n - len(miss_rows)
+        return times, np.array(miss_rows, dtype=np.int64), miss_map
+
+    def store_many(
+        self, platform: str, layer_type: str, batch: ConfigBatch, seconds: np.ndarray
+    ) -> None:
+        """Store one measured sub-batch (one key build pass, one miss each)."""
+        seconds = np.asarray(seconds, dtype=np.float64)
+        for k, t in zip(batch_keys(layer_type, batch), seconds.tolist()):
+            self._times[(platform,) + k] = t
+        self.misses += len(batch)
 
     @property
     def n_unique(self) -> int:
@@ -167,6 +237,26 @@ class CachedPlatform(Platform):
         self.cache.measure_seconds += time.perf_counter() - t0
         self.cache.store(self.inner.cache_key(), layer_type, cfg, t)
         return t
+
+    def measure_batch(self, layer_type: str, batch: ConfigBatch) -> np.ndarray:
+        """Cache-partitioned batch measurement.
+
+        One ``lookup_many`` pass splits the batch; only the sub-batch of
+        distinct misses reaches ``inner.measure_batch``; duplicates and hits
+        are filled from the cache, so every unique config is still measured
+        at most once and hit/miss totals match the scalar replay exactly.
+        """
+        key = self.inner.cache_key()
+        times, miss_rows, miss_map = self.cache.lookup_many(key, layer_type, batch)
+        if miss_rows.size:
+            sub = batch.take(miss_rows)
+            t0 = time.perf_counter()
+            y = self.inner.measure_batch(layer_type, sub)
+            self.cache.measure_seconds += time.perf_counter() - t0
+            self.cache.store_many(key, layer_type, sub, y)
+            missing = miss_map >= 0
+            times[missing] = y[miss_map[missing]]
+        return times
 
     def measure_block(self, layers: Sequence[tuple[str, Config]], **kwargs) -> float:
         # Block execution is fused/overlapped — semantically distinct from the

@@ -68,10 +68,12 @@ def train_layer_estimator(
             widths, _, n_sweep = sweeps.discover_step_widths(
                 platform, layer_type, threshold_linear
             )
+    # The whole training set is one columnar batch: sampled, measured,
+    # cache-partitioned and featurized without per-config Python loops.
     if sampling in ("pr", "random_pr"):
-        configs = prs.sample_pr_configs(space, widths, n_samples, rng)
+        configs = prs.sample_pr_batch(space, widths, n_samples, rng)
     elif sampling == "random":
-        configs = prs.sample_random_configs(space, n_samples, rng)
+        configs = prs.sample_random_batch(space, n_samples, rng)
     else:
         raise ValueError(sampling)
 
@@ -230,9 +232,13 @@ class Campaign:
             metrics = est.evaluate(self.platform, test_configs)
             if sampling != "random":
                 if i == 0:
-                    sweep_cost = est.n_sweep or self.cache.lookup_widths(
+                    # The widths cache has no entry when the widths never cost
+                    # a sweep (e.g. white-box platforms, est.n_sweep == 0):
+                    # nothing was spent, so nothing is saved by reuse.
+                    hit = self.cache.lookup_widths(
                         self.platform.cache_key(), layer_type, self.spec.threshold_linear, 384
-                    )[1]
+                    )
+                    sweep_cost = est.n_sweep or (hit[1] if hit is not None else 0)
                 else:
                     saved += sweep_cost
             metrics.update(

@@ -20,6 +20,7 @@ from typing import Mapping, Sequence
 import numpy as np
 
 from repro.accelerators.base import Platform
+from repro.core.batch import ConfigBatch
 from repro.core.blocks import Block, FusingModel
 from repro.core.estimator import LayerEstimator
 from repro.core.forest import mape, rmspe
@@ -42,13 +43,21 @@ class PerfOracle:
     def layer_types(self) -> tuple[str, ...]:
         return tuple(self.estimators)
 
-    def predict(self, layer_type: str, configs: Sequence[Config]) -> np.ndarray:
-        """Batched Eq. 7/8 prediction for one layer type."""
+    def predict(
+        self, layer_type: str, configs: Sequence[Config] | ConfigBatch
+    ) -> np.ndarray:
+        """Batched Eq. 7/8 prediction for one layer type.
+
+        Accepts dict lists or a :class:`ConfigBatch`; either way the snap,
+        feature build and forest traversal run columnarly end to end.
+        """
         est = self.estimators[layer_type]
         if hasattr(est, "predict"):
             return np.asarray(est.predict(configs), dtype=np.float64)
         # Minimal estimator stubs (tests, analytical models) may expose only
         # predict_one; degrade to a per-config loop.
+        if isinstance(configs, ConfigBatch):
+            configs = configs.to_dicts()
         return np.array([est.predict_one(c) for c in configs], dtype=np.float64)
 
     def predict_one(self, layer_type: str, cfg: Config) -> float:

@@ -4,8 +4,11 @@ Pipeline (paper Fig. 1): parameter sweeps -> Algorithm 1 step widths ->
 PR set -> PR sampling + benchmarking -> Random-Forest estimator ->
 PR mapping at query time -> building-block / whole-network combination.
 
-Submodules: steps, prs, forest, sweeps, estimator, blocks, network, advisor.
-(Imported lazily by users to avoid import cycles with repro.accelerators.)
+Submodules: batch, steps, prs, forest, sweeps, estimator, blocks, network,
+advisor.  (Imported lazily by users to avoid import cycles with
+repro.accelerators.)  The pipeline's unit of work is the columnar
+:class:`~repro.core.batch.ConfigBatch`; dict-based entry points are
+exact-parity wrappers around the batched implementations.
 
 The public entry point to this pipeline is :mod:`repro.api`
 (``CampaignSpec`` / ``Campaign`` / ``PerfOracle`` / ``EstimatorHub``), which

@@ -1,0 +1,176 @@
+"""Columnar batches of layer configurations.
+
+The pipeline's unit of work used to be one ``dict[str, int]`` config moving
+through Python loops; :class:`ConfigBatch` is the columnar replacement — a
+``(n, n_params)`` int64 matrix plus an ordered parameter tuple — that lets
+every stage (sampling, sweeps, measurement, caching, feature building, forest
+traversal) operate on whole batches with numpy array ops.
+
+Dict-based entry points remain as one-row / row-loop wrappers around the
+batch path, so external code keeps working unchanged.  A batch is immutable;
+"mutating" helpers (:meth:`replace`, :meth:`take`, :meth:`with_fixed`) return
+new batches and never alias caller-visible state destructively.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Mapping, Sequence
+
+import numpy as np
+
+#: One layer configuration, e.g. ``{"C": 40, "K": 16, "F": 3}``.
+Config = dict[str, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConfigBatch:
+    """``n`` configurations over a fixed parameter tuple, stored columnarly."""
+
+    params: tuple[str, ...]
+    values: np.ndarray  # (n, len(params)) int64
+
+    def __post_init__(self) -> None:
+        vals = np.asarray(self.values, dtype=np.int64)
+        if vals.ndim != 2 or vals.shape[1] != len(self.params):
+            raise ValueError(
+                f"values shape {vals.shape} does not match params {self.params}"
+            )
+        object.__setattr__(self, "params", tuple(self.params))
+        object.__setattr__(self, "values", vals)
+
+    # ------------------------------------------------------------- construction
+    @classmethod
+    def from_dicts(
+        cls, configs: Sequence[Config], params: tuple[str, ...] | None = None
+    ) -> "ConfigBatch":
+        """Columnarise a list of dict configs (all must share one key set)."""
+        if params is None:
+            params = tuple(configs[0].keys()) if configs else ()
+        key_set = set(params)
+        vals = np.empty((len(configs), len(params)), dtype=np.int64)
+        for i, cfg in enumerate(configs):
+            if set(cfg.keys()) != key_set:
+                raise ValueError(
+                    f"config {i} keys {sorted(cfg)} != batch params {sorted(key_set)}"
+                )
+            for j, p in enumerate(params):
+                v = cfg[p]
+                iv = int(v)
+                if iv != v:
+                    # Refuse to silently truncate (e.g. 7.5 -> 7); callers at
+                    # the dict boundary catch ValueError and fall back to the
+                    # scalar path, which handles non-integer values as before.
+                    raise ValueError(f"config {i} param {p!r}={v!r} is not an integer")
+                vals[i, j] = iv
+        return cls(params=params, values=vals)
+
+    @classmethod
+    def from_columns(cls, columns: Mapping[str, np.ndarray]) -> "ConfigBatch":
+        """Build from per-parameter value columns (all the same length)."""
+        params = tuple(columns.keys())
+        if not params:
+            return cls(params=(), values=np.empty((0, 0), dtype=np.int64))
+        cols = [np.asarray(columns[p], dtype=np.int64) for p in params]
+        n = len(cols[0])
+        if any(c.shape != (n,) for c in cols):
+            raise ValueError("columns must be 1-D and of equal length")
+        return cls(params=params, values=np.stack(cols, axis=1))
+
+    @classmethod
+    def from_anchor(cls, cfg: Config, n: int) -> "ConfigBatch":
+        """``n`` identical rows of one anchor configuration."""
+        params = tuple(cfg.keys())
+        row = np.array([cfg[p] for p in params], dtype=np.int64)
+        return cls(params=params, values=np.tile(row, (n, 1)))
+
+    @classmethod
+    def concat(cls, batches: Iterable["ConfigBatch"]) -> "ConfigBatch":
+        """Stack batches over the same parameter tuple."""
+        batches = list(batches)
+        if not batches:
+            return cls(params=(), values=np.empty((0, 0), dtype=np.int64))
+        params = batches[0].params
+        if any(b.params != params for b in batches):
+            raise ValueError("cannot concat batches with differing params")
+        return cls(params=params, values=np.concatenate([b.values for b in batches]))
+
+    # ------------------------------------------------------------- inspection
+    def __len__(self) -> int:
+        return self.values.shape[0]
+
+    def _index(self, p: str) -> int:
+        try:
+            return self.params.index(p)
+        except ValueError:
+            raise KeyError(p) from None
+
+    def column(self, p: str) -> np.ndarray:
+        """The (n,) int64 value column of one parameter."""
+        return self.values[:, self._index(p)]
+
+    def get(self, p: str, default: int | None = None):
+        """Column of ``p``, or the scalar ``default`` when absent (broadcasts)."""
+        if p in self.params:
+            return self.column(p)
+        return default
+
+    def row(self, i: int) -> Config:
+        return {p: int(v) for p, v in zip(self.params, self.values[i])}
+
+    def to_dicts(self) -> list[Config]:
+        """Back to row dicts (plain Python ints)."""
+        rows = self.values.tolist()
+        return [dict(zip(self.params, row)) for row in rows]
+
+    def matrix(self, params: Sequence[str]) -> np.ndarray:
+        """Float64 matrix of the given columns in the given order."""
+        idx = [self._index(p) for p in params]
+        return self.values[:, idx].astype(np.float64)
+
+    # ------------------------------------------------------------- derivation
+    def take(self, rows: np.ndarray) -> "ConfigBatch":
+        """Row sub-batch (fancy-indexed copy)."""
+        return ConfigBatch(params=self.params, values=self.values[rows])
+
+    def replace(self, p: str, column: np.ndarray) -> "ConfigBatch":
+        """New batch with one column replaced."""
+        vals = self.values.copy()
+        vals[:, self._index(p)] = np.asarray(column, dtype=np.int64)
+        return ConfigBatch(params=self.params, values=vals)
+
+    def with_fixed(self, fixed: Mapping[str, int]) -> "ConfigBatch":
+        """Append constant columns for parameters not already present.
+
+        Mirrors :meth:`repro.core.prs.ParamSpace.with_fixed`: existing columns
+        win over the fixed values.
+        """
+        extra = [p for p in fixed if p not in self.params]
+        if not extra:
+            return self
+        n = len(self)
+        cols = np.empty((n, len(extra)), dtype=np.int64)
+        for j, p in enumerate(extra):
+            cols[:, j] = int(fixed[p])
+        return ConfigBatch(
+            params=self.params + tuple(extra),
+            values=np.concatenate([self.values, cols], axis=1),
+        )
+
+    def dedup(self) -> tuple["ConfigBatch", np.ndarray, np.ndarray]:
+        """Unique rows in first-occurrence order.
+
+        Returns ``(unique, first_rows, inverse)`` with
+        ``unique.values == self.values[first_rows]`` and
+        ``self.values == unique.values[inverse]``.
+        """
+        if len(self) == 0:
+            return self, np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64)
+        _, first, inv = np.unique(
+            self.values, axis=0, return_index=True, return_inverse=True
+        )
+        inv = inv.reshape(-1)  # numpy >= 2.0 returns (n, 1) for axis=0
+        order = np.argsort(first, kind="stable")  # sorted-unique -> first-seen order
+        rank = np.empty_like(order)
+        rank[order] = np.arange(len(order))
+        return self.take(first[order]), first[order], rank[inv]

@@ -21,7 +21,8 @@ import numpy as np
 
 from repro.accelerators.base import Platform
 from repro.core import prs
-from repro.core.features import derived_features
+from repro.core.batch import ConfigBatch
+from repro.core.features import derived_features, derived_features_batch
 from repro.core.forest import RandomForestRegressor, mape, rmspe
 
 
@@ -39,7 +40,34 @@ class LayerEstimator:
     sampling: str = "pr"
     log_target: bool = True
 
-    def _features(self, configs: Sequence[prs.Config], snap: bool = True) -> np.ndarray:
+    def _features(
+        self, configs: Sequence[prs.Config] | ConfigBatch, snap: bool = True
+    ) -> np.ndarray:
+        """Columnar feature matrix: base params + derived descriptors.
+
+        Accepts a :class:`ConfigBatch` directly or any homogeneous dict list
+        (columnarised on the fly); heterogeneous key sets fall back to the
+        per-row dict path.
+        """
+        if not isinstance(configs, ConfigBatch):
+            configs = list(configs)
+            if not configs:
+                # An empty list carries no key set to columnarise from.
+                return self._features_rows(configs, snap)
+            try:
+                configs = ConfigBatch.from_dicts(configs)
+            except ValueError:
+                return self._features_rows(configs, snap)
+        if snap:
+            configs = prs.map_to_pr_batch(configs, self.widths, self.space)
+        base = configs.matrix(self.params)
+        extra = derived_features_batch(self.layer_type, configs)
+        if extra.size == 0:
+            return base
+        return np.concatenate([base, extra], axis=1)
+
+    def _features_rows(self, configs: Sequence[prs.Config], snap: bool) -> np.ndarray:
+        """Row-at-a-time fallback for ragged (mixed-key) config lists."""
         if snap:
             configs = [prs.map_to_pr(c, self.widths, self.space) for c in configs]
         base = prs.configs_to_matrix(configs, self.params)
@@ -51,7 +79,7 @@ class LayerEstimator:
             return base
         return np.concatenate([base, extra], axis=1)
 
-    def predict(self, configs: Sequence[prs.Config]) -> np.ndarray:
+    def predict(self, configs: Sequence[prs.Config] | ConfigBatch) -> np.ndarray:
         """Eq. 7/8: map to PR, then predict with the forest."""
         y = self.forest.predict(self._features(configs, snap=True))
         return np.exp(y) if self.log_target else y
@@ -59,8 +87,13 @@ class LayerEstimator:
     def predict_one(self, cfg: prs.Config) -> float:
         return float(self.predict([cfg])[0])
 
-    def evaluate(self, platform: Platform, test_configs: Sequence[prs.Config]) -> dict[str, float]:
-        y_true = platform.measure_many(self.layer_type, list(test_configs))
+    def evaluate(
+        self, platform: Platform, test_configs: Sequence[prs.Config] | ConfigBatch
+    ) -> dict[str, float]:
+        y_true = platform.measure_many(
+            self.layer_type,
+            test_configs if isinstance(test_configs, ConfigBatch) else list(test_configs),
+        )
         y_pred = self.predict(test_configs)
         return {"mape": mape(y_true, y_pred), "rmspe": rmspe(y_true, y_pred)}
 

@@ -12,7 +12,9 @@ baselines.
 
 from __future__ import annotations
 
-from repro.core.prs import Config
+import numpy as np
+
+from repro.core.batch import Config, ConfigBatch
 
 
 def _conv_out(size: int, f: int, s: int, pad: int) -> int:
@@ -57,6 +59,61 @@ def derived_features(layer_type: str, cfg: Config) -> dict[str, float]:
     if layer_type == "embed":
         return {"bytes": cfg["tokens"] * cfg["d_model"], "macs": cfg["tokens"] * cfg["d_model"]}
     return {}
+
+
+def derived_features_batch(layer_type: str, batch: ConfigBatch) -> np.ndarray:
+    """Columnar :func:`derived_features`: an ``(n, n_derived)`` float64 matrix.
+
+    Column order matches the dict version's insertion order, and every
+    formula mirrors the scalar arithmetic operation for operation so the
+    matrix is bitwise-identical to stacking per-row dict results.
+    """
+    col = batch.column
+    get = batch.get
+    if layer_type == "conv1d":
+        s, pad = get("s", 1), get("pad", 0)
+        w_out = np.maximum(1, (col("C_w") + 2 * pad - col("F")) // s + 1)
+        macs = col("C") * col("K") * w_out * col("F")
+        weights = col("C") * col("K") * col("F")
+        cols = [w_out, macs, weights]
+    elif layer_type == "conv2d":
+        s, pad = get("s", 1), get("pad", 1)
+        h_out = np.maximum(1, (col("C_h") + 2 * pad - col("F")) // s + 1)
+        w_out = np.maximum(1, (col("C_w") + 2 * pad - col("F")) // s + 1)
+        macs = col("C") * col("K") * h_out * w_out * col("F") ** 2
+        cols = [h_out * w_out, macs, col("C") * col("K") * col("F") ** 2]
+    elif layer_type == "fully_connected":
+        mw = col("in") * col("out")
+        cols = [mw, mw]
+    elif layer_type == "dense":
+        macs = col("tokens") * col("d_in") * col("d_out")
+        byt = col("tokens") * (col("d_in") + col("d_out")) + col("d_in") * col("d_out")
+        cols = [macs, byt, col("d_in") * col("d_out")]
+    elif layer_type == "attention_prefill":
+        kvh = np.maximum(1, col("H") // get("kv_ratio", 4))
+        macs = col("B") * col("H") * col("S") ** 2 * col("Dh")
+        byt = col("B") * col("S") * col("Dh") * (2 * col("H") + 2 * kvh)
+        cols = [macs, byt]
+    elif layer_type == "attention_decode":
+        kvh = np.maximum(1, col("H") // get("kv_ratio", 4))
+        macs = col("B") * col("H") * col("S_kv") * col("Dh")
+        byt = col("B") * kvh * col("S_kv") * col("Dh") * 2
+        cols = [macs, byt]
+    elif layer_type == "moe_gemm":
+        per_expert = col("tokens") * col("topk") / np.maximum(1, col("E"))
+        macs = 3 * col("tokens") * col("topk") * col("d_model") * col("d_ff")
+        weights = 3 * col("E") * col("d_model") * col("d_ff")
+        cols = [macs, weights, per_expert]
+    elif layer_type == "ssd_scan":
+        macs = col("B") * col("S") * col("H") * col("P") * (2 * col("N") + 128)
+        byt = col("B") * col("S") * (2 * col("H") * col("P") + 2 * col("N"))
+        cols = [macs, byt]
+    elif layer_type == "embed":
+        td = col("tokens") * col("d_model")
+        cols = [td, td]
+    else:
+        return np.empty((len(batch), 0), dtype=np.float64)
+    return np.stack([np.asarray(c, dtype=np.float64) for c in cols], axis=1)
 
 
 def feature_names(layer_type: str, params: tuple[str, ...]) -> tuple[str, ...]:

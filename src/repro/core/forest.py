@@ -5,6 +5,12 @@ paper's substrate, so we implement CART regression trees + bagging ourselves.
 Split search is the exact greedy variance-reduction criterion, vectorised with
 prefix sums over per-feature sorted orders.  Predictions of a forest are the
 mean over trees (each tree predicts the mean target of the reached leaf).
+
+Forest prediction is a single vectorized traversal: all trees' node tables
+are stacked into padded ``(n_trees, max_nodes)`` arrays so one descent loop
+advances every (tree, sample) pair at once instead of looping tree by tree.
+The per-tree accumulation order is preserved, so predictions stay bitwise
+equal to the historical per-tree loop.
 """
 
 from __future__ import annotations
@@ -36,6 +42,57 @@ class _Tree:
             nxt = np.where(go_left, self.left[node[active]], self.right[node[active]])
             node[active] = nxt
         return self.value[node]
+
+
+@dataclasses.dataclass
+class _ForestStack:
+    """All trees' node tables padded into ``(n_trees, max_nodes)`` arrays.
+
+    Padding slots carry ``feature == -1`` (leaf) and are never reached: every
+    traversal starts at node 0, which is real in every tree.
+    """
+
+    feature: np.ndarray  # (T, N) int32, -1 for leaves/padding
+    threshold: np.ndarray  # (T, N) float64
+    left: np.ndarray  # (T, N) int32
+    right: np.ndarray  # (T, N) int32
+    value: np.ndarray  # (T, N) float64
+
+    @classmethod
+    def from_trees(cls, trees: list[_Tree]) -> "_ForestStack":
+        n_nodes = max(len(t.feature) for t in trees)
+        T = len(trees)
+        feature = np.full((T, n_nodes), -1, dtype=np.int32)
+        threshold = np.zeros((T, n_nodes), dtype=np.float64)
+        left = np.zeros((T, n_nodes), dtype=np.int32)
+        right = np.zeros((T, n_nodes), dtype=np.int32)
+        value = np.zeros((T, n_nodes), dtype=np.float64)
+        for i, t in enumerate(trees):
+            m = len(t.feature)
+            feature[i, :m] = t.feature
+            threshold[i, :m] = t.threshold
+            left[i, :m] = t.left
+            right[i, :m] = t.right
+            value[i, :m] = t.value
+        return cls(feature, threshold, left, right, value)
+
+    def predict_all(self, X: np.ndarray) -> np.ndarray:
+        """(T, n) leaf values: one descent loop for every (tree, sample) pair."""
+        T = self.feature.shape[0]
+        n = X.shape[0]
+        node = np.zeros((T, n), dtype=np.int32)
+        rows = np.arange(T)[:, None]
+        cols = np.arange(n)[None, :]
+        while True:
+            feat = self.feature[rows, node]
+            active = feat >= 0
+            if not np.any(active):
+                break
+            x = X[cols, np.where(active, feat, 0)]
+            go_left = x <= self.threshold[rows, node]
+            nxt = np.where(go_left, self.left[rows, node], self.right[rows, node])
+            node = np.where(active, nxt, node)
+        return self.value[rows, node]
 
 
 def _build_tree(
@@ -146,7 +203,24 @@ class RandomForestRegressor:
         self.max_features = max_features
         self.bootstrap = bootstrap
         self.seed = seed
-        self._trees: list[_Tree] = []
+        self._trees = []
+
+    # The tree list is a property so that direct assignment (fit, and the
+    # EstimatorHub, which rebuilds ``forest._trees`` on load) invalidates the
+    # cached stacked node tables.
+    @property
+    def _trees(self) -> list[_Tree]:
+        return self.__trees
+
+    @_trees.setter
+    def _trees(self, trees: list[_Tree]) -> None:
+        self.__trees = list(trees)
+        self.__stack: _ForestStack | None = None
+
+    def _stacked(self) -> _ForestStack:
+        if self.__stack is None:
+            self.__stack = _ForestStack.from_trees(self.__trees)
+        return self.__stack
 
     def _n_features_per_split(self, n_features: int) -> int:
         mf = self.max_features
@@ -180,9 +254,12 @@ class RandomForestRegressor:
         X = np.asarray(X, dtype=np.float64)
         if not self._trees:
             raise RuntimeError("fit() before predict()")
+        per_tree = self._stacked().predict_all(X)
+        # Accumulate tree by tree (not np.sum's pairwise order) so the mean is
+        # bitwise equal to the historical ``acc += tree.predict(X)`` loop.
         acc = np.zeros(X.shape[0], dtype=np.float64)
-        for t in self._trees:
-            acc += t.predict(X)
+        for row in per_tree:
+            acc += row
         return acc / len(self._trees)
 
 

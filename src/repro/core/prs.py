@@ -5,6 +5,14 @@ ranges).  Given per-parameter step widths ``W`` (from Algorithm 1 or white-box
 knowledge) the PR set is the grid ``{x_p * w_p : x_p in N}`` clipped to the
 range (Eq. 2/4).  Estimation-time queries are mapped onto their PR with
 ``x_p = ceil(p / w_p)`` (Eq. 7/8).
+
+Sampling and PR mapping are columnar: the batch entry points
+(:func:`sample_pr_batch`, :func:`sample_random_batch`, :func:`map_to_pr_batch`)
+draw and snap whole :class:`~repro.core.batch.ConfigBatch` matrices with array
+ops; the dict-based functions are exact-parity wrappers around them.  Batched
+sampling consumes the ``numpy.random.Generator`` bitstream identically to the
+historical per-config/per-param scalar loop (one bounded draw per matrix cell
+in row-major order), so fixed seeds keep producing the same training sets.
 """
 
 from __future__ import annotations
@@ -15,7 +23,7 @@ from typing import Iterable, Mapping
 
 import numpy as np
 
-Config = dict[str, int]
+from repro.core.batch import Config, ConfigBatch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,34 +68,86 @@ def count_pr_configs(space: ParamSpace, widths: Mapping[str, int]) -> int:
     return n
 
 
-def map_to_pr(cfg: Config, widths: Mapping[str, int], space: ParamSpace | None = None) -> Config:
-    """Eq. 7/8: snap every parameter to the next-larger multiple of its width.
+def map_to_pr_batch(
+    batch: ConfigBatch, widths: Mapping[str, int], space: ParamSpace | None = None
+) -> ConfigBatch:
+    """Eq. 7/8 over a whole batch: snap every quantized column with array ops.
 
     With a ``space`` given, every quantized (``w > 1``) parameter lands on
-    the PR grid of its range, i.e. ``map_to_pr(cfg, W, S)[p] in
-    pr_values(lo, hi, W[p])`` — even for out-of-range query values, and in
+    the PR grid of its range, i.e. every snapped value is in
+    ``pr_values(lo, hi, W[p])`` — even for out-of-range query values, and in
     the degenerate cases where the range holds no multiple of the width
     (``hi < w``, or ``lo`` past the last in-range multiple), whose only
     representative is ``hi``.  Width-1 (linear) parameters pass through
     unsnapped.
     """
-    out = dict(cfg)
-    for p, w in widths.items():
-        if p in out and w > 1:
-            snapped = int(math.ceil(out[p] / w)) * w
-            if space is not None and p in space.ranges:
-                lo, hi = space.ranges[p]
-                top = int(math.floor(hi / w)) * w  # largest multiple of w <= hi
-                first = max(w, int(math.ceil(lo / w)) * w)  # smallest in-range PR
-                if top < first:
-                    # No multiple of w inside [lo, hi]: hi is the sole PR.
-                    snapped = hi
-                else:
-                    # Clamp into [first, top] so even out-of-range query
-                    # values land on the grid (first == w for in-range ones).
-                    snapped = min(max(snapped, first), top)
-            out[p] = snapped
-    return out
+    vals = batch.values.copy()
+    for j, p in enumerate(batch.params):
+        w = widths.get(p, 1)
+        if w <= 1:
+            continue
+        # ceil(v / w) * w via integer ceildiv (== the float formula for all
+        # v < 2**53, i.e. everywhere in the integer config domain).
+        snapped = -(-vals[:, j] // w) * w
+        if space is not None and p in space.ranges:
+            lo, hi = space.ranges[p]
+            top = int(math.floor(hi / w)) * w  # largest multiple of w <= hi
+            first = max(w, int(math.ceil(lo / w)) * w)  # smallest in-range PR
+            if top < first:
+                # No multiple of w inside [lo, hi]: hi is the sole PR.
+                snapped[:] = hi
+            else:
+                # Clamp into [first, top] so even out-of-range query
+                # values land on the grid (first == w for in-range ones).
+                snapped = np.clip(snapped, first, top)
+        vals[:, j] = snapped
+    return ConfigBatch(params=batch.params, values=vals)
+
+
+def map_to_pr(cfg: Config, widths: Mapping[str, int], space: ParamSpace | None = None) -> Config:
+    """Eq. 7/8 for one dict config — a one-row wrapper of :func:`map_to_pr_batch`.
+
+    Non-integer values (outside the ``Config`` contract but accepted by the
+    historical scalar formula) keep their old behavior via the scalar branch.
+    """
+    try:
+        batch = ConfigBatch.from_dicts([cfg])
+    except ValueError:
+        out = dict(cfg)
+        for p, w in widths.items():
+            if p in out and w > 1:
+                snapped = int(math.ceil(out[p] / w)) * w
+                if space is not None and p in space.ranges:
+                    lo, hi = space.ranges[p]
+                    top = int(math.floor(hi / w)) * w
+                    first = max(w, int(math.ceil(lo / w)) * w)
+                    snapped = hi if top < first else min(max(snapped, first), top)
+                out[p] = snapped
+        return out
+    return map_to_pr_batch(batch, widths, space).row(0)
+
+
+def sample_pr_batch(
+    space: ParamSpace,
+    widths: Mapping[str, int],
+    n: int,
+    rng: np.random.Generator,
+) -> ConfigBatch:
+    """Uniformly sample an ``n``-row batch from the PR set.
+
+    One broadcast ``rng.integers`` call draws the whole index matrix; numpy
+    consumes one bounded draw per cell in row-major order, exactly like the
+    historical per-config ``rng.choice`` loop, so seeds stay reproducible
+    across the scalar/batched paths.
+    """
+    per_param = [pr_values(lo, hi, widths.get(p, 1)) for p, (lo, hi) in space.ranges.items()]
+    highs = np.array([len(v) for v in per_param], dtype=np.int64)
+    idx = rng.integers(0, highs[None, :], size=(n, len(per_param)))
+    values = np.empty((n, len(per_param)), dtype=np.int64)
+    for j, vals in enumerate(per_param):
+        values[:, j] = vals[idx[:, j]]
+    batch = ConfigBatch(params=space.params, values=values)
+    return batch.with_fixed(space.fixed)
 
 
 def sample_pr_configs(
@@ -96,22 +156,22 @@ def sample_pr_configs(
     n: int,
     rng: np.random.Generator,
 ) -> list[Config]:
-    """Uniformly sample ``n`` configurations from the PR set."""
-    per_param = {p: pr_values(lo, hi, widths.get(p, 1)) for p, (lo, hi) in space.ranges.items()}
-    out: list[Config] = []
-    for _ in range(n):
-        cfg = {p: int(rng.choice(vals)) for p, vals in per_param.items()}
-        out.append(space.with_fixed(cfg))
-    return out
+    """Uniformly sample ``n`` configurations from the PR set (dict wrapper)."""
+    return sample_pr_batch(space, widths, n, rng).to_dicts()
+
+
+def sample_random_batch(space: ParamSpace, n: int, rng: np.random.Generator) -> ConfigBatch:
+    """Uniformly sample an ``n``-row batch from the *complete* space."""
+    los = np.array([lo for lo, _ in space.ranges.values()], dtype=np.int64)
+    his = np.array([hi for _, hi in space.ranges.values()], dtype=np.int64)
+    vals = rng.integers(los[None, :], his[None, :] + 1, size=(n, len(los)))
+    batch = ConfigBatch(params=space.params, values=vals)
+    return batch.with_fixed(space.fixed)
 
 
 def sample_random_configs(space: ParamSpace, n: int, rng: np.random.Generator) -> list[Config]:
     """Uniformly sample ``n`` configurations from the *complete* space."""
-    out: list[Config] = []
-    for _ in range(n):
-        cfg = {p: int(rng.integers(lo, hi + 1)) for p, (lo, hi) in space.ranges.items()}
-        out.append(space.with_fixed(cfg))
-    return out
+    return sample_random_batch(space, n, rng).to_dicts()
 
 
 def configs_to_matrix(configs: Iterable[Config], params: tuple[str, ...]) -> np.ndarray:

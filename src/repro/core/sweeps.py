@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.accelerators.base import Platform
 from repro.core import steps
+from repro.core.batch import ConfigBatch
 from repro.core.prs import Config
 
 
@@ -43,16 +44,18 @@ def run_sweeps(
     space = platform.param_space(layer_type)
     defaults = platform.defaults(layer_type)
     params = tuple(params) if params is not None else space.params
+    anchor = space.with_fixed(defaults)
     out: dict[str, tuple[np.ndarray, np.ndarray]] = {}
     for p in params:
         lo, hi = space.ranges[p]
         xs = sweep_window(lo, hi, defaults.get(p, lo), n_points)
-        configs: list[Config] = []
-        for v in xs:
-            cfg = dict(defaults)
-            cfg[p] = int(v)
-            configs.append(space.with_fixed(cfg))
-        ys = platform.measure_many(layer_type, configs)
+        # One columnar batch per window: anchor rows with the swept column
+        # replaced, instead of n_points dict copies.  Platforms may omit a
+        # swept param from defaults(); seed the column so replace() can fill it.
+        base_cfg = dict(anchor)
+        base_cfg.setdefault(p, int(xs[0]))
+        batch = ConfigBatch.from_anchor(base_cfg, len(xs)).replace(p, xs)
+        ys = platform.measure_batch(layer_type, batch)
         out[p] = (xs, ys)
     return out
 
