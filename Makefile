@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench bench-engine quickstart
+.PHONY: test bench-smoke bench bench-engine bench-runtime quickstart
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -11,6 +11,9 @@ bench-smoke:
 
 bench-engine:
 	$(PYTHON) -m benchmarks.bench_engine
+
+bench-runtime:
+	$(PYTHON) -m benchmarks.bench_runtime
 
 bench:
 	$(PYTHON) -m benchmarks.run

@@ -1,0 +1,135 @@
+"""Measurement-runtime throughput: sharded worker pool vs serial execution.
+
+Times the same batch of distinct configurations through the
+:class:`~repro.runtime.MeasurementScheduler` twice — once on the in-process
+serial executor and once on a process pool — against the ``stepped_sim``
+platform with an emulated per-configuration benchmarking cost (``--delay``
+seconds of wall clock per config, the regime real-hardware platforms live
+in).  Pool spawn/warm-up time is measured separately and excluded from the
+throughput comparison, mirroring a long campaign where the pool is paid for
+once.
+
+Asserts the pool result is bitwise-identical to the serial result (the
+runtime's ordering invariant), then runs a 2-worker mini-campaign with a
+journal and re-runs it to assert the crash-safe-resume invariant (zero
+re-measurements).  Writes ``BENCH_runtime.json``::
+
+    PYTHONPATH=src python -m benchmarks.bench_runtime [--workers 2] [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.api import Campaign, CampaignSpec, RuntimeSpec
+from repro.core.batch import ConfigBatch
+from repro.runtime import MeasurementRuntime
+from repro.runtime.testing import SteppedSimPlatform
+
+OUT_PATH = "BENCH_runtime.json"
+
+
+def _distinct_batch(n: int) -> ConfigBatch:
+    """``n`` distinct configurations from stepped_sim's 64x32 space."""
+    rng = np.random.default_rng(0)
+    flat = rng.choice(64 * 32, size=n, replace=False)
+    return ConfigBatch.from_columns({"a": flat // 32 + 1, "b": flat % 32 + 1})
+
+
+def _timed_measure(runtime: MeasurementRuntime, batch: ConfigBatch) -> tuple[np.ndarray, float]:
+    t0 = time.perf_counter()
+    y = runtime.measure("toy", batch)
+    return y, time.perf_counter() - t0
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--n", type=int, default=384, help="distinct configs to measure")
+    ap.add_argument("--delay", type=float, default=0.002,
+                    help="emulated wall-clock seconds per measured config")
+    ap.add_argument("--chunk", type=int, default=32)
+    ap.add_argument("--smoke", action="store_true", help="small sizes for CI")
+    args = ap.parse_args(argv)
+    n = 128 if args.smoke else args.n
+
+    platform = SteppedSimPlatform(delay_s=args.delay)
+    batch = _distinct_batch(n)
+
+    with MeasurementRuntime(RuntimeSpec(workers=1, chunk_size=args.chunk), platform) as rt:
+        y_serial, serial_s = _timed_measure(rt, batch)
+
+    t0 = time.perf_counter()
+    pool_rt = MeasurementRuntime(
+        RuntimeSpec(workers=args.workers, chunk_size=args.chunk), platform
+    )
+    with pool_rt:
+        # Warm the pool outside the timed section: ProcessPoolExecutor spawns
+        # workers lazily, so submit one chunk per worker to force every
+        # process (and its imports) up before the clock starts.
+        pool_rt.measure("toy", _distinct_batch(args.workers * args.chunk))
+        warmup_s = time.perf_counter() - t0
+        y_pool, pool_s = _timed_measure(pool_rt, batch)
+
+    # hard invariant: worker count never changes the numbers or their order
+    assert np.array_equal(y_serial, y_pool), "pool result diverges from serial"
+    speedup = serial_s / pool_s
+
+    # ---- mini-campaign: pool execution + journal, then crash-safe resume
+    with tempfile.TemporaryDirectory() as tmp:
+        journal = os.path.join(tmp, "measurements.jsonl")
+        spec = CampaignSpec(
+            platform="stepped_sim",
+            layer_types=("toy",),
+            n_samples=64,
+            forest_kwargs={"n_estimators": 8, "max_depth": 12},
+        )
+        first = Campaign(spec, platform=SteppedSimPlatform(delay_s=args.delay / 4))
+        first.run(runtime=RuntimeSpec(
+            workers=args.workers, chunk_size=args.chunk, journal_path=journal
+        ))
+        resumed = Campaign(spec, platform=SteppedSimPlatform(delay_s=args.delay / 4))
+        resumed.run(runtime=RuntimeSpec(workers=1, journal_path=journal))
+        assert resumed.cache.misses == 0, "resume re-measured journaled configs"
+        assert resumed.cache.replayed == first.cache.misses
+        campaign_stats = {"first": first.last_run_stats, "resumed": resumed.last_run_stats}
+
+    report = {
+        "spec": {"n": n, "delay_s": args.delay, "chunk_size": args.chunk,
+                 "workers": args.workers},
+        "serial": {"wall_s": serial_s, "configs_per_s": n / serial_s},
+        "pool": {"wall_s": pool_s, "configs_per_s": n / pool_s,
+                 "warmup_s": warmup_s},
+        "speedup": speedup,
+        "campaign": campaign_stats,
+        "parity": True,
+        "resume_zero_remeasure": True,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=1)
+
+    emit("runtime.serial", serial_s / n * 1e6, f"configs_per_s={n / serial_s:.0f}")
+    emit("runtime.pool", pool_s / n * 1e6,
+         f"configs_per_s={n / pool_s:.0f} workers={args.workers}")
+    emit("runtime.speedup", 0.0, f"pool_vs_serial={speedup:.2f}x warmup_s={warmup_s:.2f}")
+
+    # Parity/resume asserts above are the hard gate; the throughput floor
+    # guards against the scheduler serializing by accident.  CI runners are
+    # contended, so the floor is tunable there.
+    min_speedup = float(os.environ.get("REPRO_RUNTIME_MIN_SPEEDUP", "1.3"))
+    if speedup < min_speedup:
+        raise RuntimeError(
+            f"runtime regression: pool speedup {speedup:.2f}x < {min_speedup:g}x"
+        )
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -59,6 +59,22 @@ class Platform(abc.ABC):
         """
         return self.name
 
+    def spawn_spec(self) -> tuple[str, dict, str | None]:
+        """Picklable recipe for rebuilding this platform in a worker process.
+
+        Returns ``(registry_name, ctor_kwargs, module)``: the measurement
+        runtime's process-pool workers import ``module`` (which registers the
+        platform) and instantiate ``registry_name`` with ``ctor_kwargs`` —
+        platform *instances* are never pickled (jitted closures and device
+        handles cannot cross process boundaries).
+
+        The default covers platforms whose registry name equals ``name`` and
+        whose constructor takes no arguments; parameterised platforms must
+        override it and include every constructor argument that affects the
+        timing model (everything returned must pickle).
+        """
+        return (self.name, {}, type(self).__module__)
+
     # ---- measurement ---------------------------------------------------------------
     @abc.abstractmethod
     def measure(self, layer_type: str, cfg: Config) -> float:

@@ -96,6 +96,20 @@ class TPUv5eSim(Platform):
             f"|topk={self.moe_topk}|kv={self.kv_ratio}"
         )
 
+    def spawn_spec(self) -> tuple[str, dict, str]:
+        # ``name`` is "tpu_v5e[<knowledge>]", not the registry name, so the
+        # base recipe does not apply; every timing-model parameter rides along.
+        kwargs = {
+            "knowledge": self.knowledge,
+            "noise": self.noise,
+            "moe_experts": self.moe_experts,
+            "moe_topk": self.moe_topk,
+            "kv_ratio": self.kv_ratio,
+        }
+        if self.chip is not V5E:
+            kwargs["chip"] = self.chip  # frozen dataclass, pickles fine
+        return ("tpu_v5e", kwargs, "repro.accelerators.tpu_v5e")
+
     # ------------------------------------------------------------- capability
     def layer_types(self) -> tuple[str, ...]:
         return (

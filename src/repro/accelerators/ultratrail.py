@@ -32,6 +32,11 @@ class UltraTrailSim(Platform):
     #: fixed per-layer control/configuration overhead (cycles)
     OVERHEAD_CYCLES = 96.0
 
+    def spawn_spec(self) -> tuple[str, dict, str]:
+        # Stateless constructor: the base recipe suffices; spelled out so the
+        # picklable-measure-entry-point contract is explicit per backend.
+        return ("ultratrail", {}, "repro.accelerators.ultratrail")
+
     def layer_types(self) -> tuple[str, ...]:
         return ("conv1d",)
 

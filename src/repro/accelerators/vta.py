@@ -30,6 +30,11 @@ class VTASim(Platform):
     #: load/store throughput of the on-chip buffers, elements per cycle
     IO_LANES = 64
 
+    def spawn_spec(self) -> tuple[str, dict, str]:
+        # Stateless constructor: the base recipe suffices; spelled out so the
+        # picklable-measure-entry-point contract is explicit per backend.
+        return ("vta", {}, "repro.accelerators.vta")
+
     def layer_types(self) -> tuple[str, ...]:
         return ("conv2d", "fully_connected")
 

@@ -6,16 +6,25 @@ methodology.  Layers are jitted with XLA and timed; the paper's median-of-k
 protocol (it used 500 runs on the Jetson) mitigates warm-up noise.
 
 Measurement is expensive -- keep parameter spaces small and use this platform
-for the black-box evaluation path only.
+for the black-box evaluation path only.  With the measurement runtime
+(:mod:`repro.runtime`), the cache-miss sub-batches of a campaign are sharded
+across a process pool; workers rebuild the platform from :meth:`spawn_spec`.
+
+``synthetic=True`` swaps the wall clock for a deterministic tile-quantised
+analytical proxy (same parameter space, same step structure).  That mode
+exists for the runtime's reproducibility guarantees — bitwise-identical
+campaigns across worker counts, byte-identical resumed checkpoints — which a
+noisy wall clock cannot certify, and for CI smoke runs on contended runners.
+jax is imported lazily on the first real measurement, so synthetic workers
+(and journal replays) never pay the jax startup cost.
 """
 
 from __future__ import annotations
 
+import math
 import time
-from functools import partial
+from functools import lru_cache
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.accelerators.base import Platform
@@ -24,23 +33,52 @@ from repro.core.batch import ConfigBatch
 from repro.core.prs import Config, ParamSpace
 
 
-@partial(jax.jit, static_argnums=(0, 1, 2))
-def _dense(m: int, k: int, n: int, a, b):
-    del m, k, n
-    return a @ b
+@lru_cache(maxsize=1)
+def _jit_dense():
+    """Deferred jax import + jit: only the wall-clock path needs a device."""
+    from functools import partial
+
+    import jax
+    import jax.numpy as jnp
+
+    @partial(jax.jit, static_argnums=(0, 1, 2))
+    def dense(m: int, k: int, n: int, a, b):
+        del m, k, n
+        return a @ b
+
+    return jnp, dense
 
 
 class XLACPUPlatform(Platform):
     name = "xla_cpu"
     knowledge = "black"
 
-    def __init__(self, repeats: int = 5, dtype=jnp.float32) -> None:
+    #: synthetic-mode model: row tile, contraction/output tile, GEMM rate
+    SYN_TILE_M = 8
+    SYN_TILE_KN = 64
+    SYN_FLOPS = 5e10
+    SYN_OVERHEAD_S = 2e-6
+
+    def __init__(self, repeats: int = 5, dtype="float32", synthetic: bool = False) -> None:
         self.repeats = repeats
-        self.dtype = dtype
+        self.dtype = np.dtype(dtype)  # accepts "float32", np.float32, jnp.float32
+        self.synthetic = bool(synthetic)
         self._cache: dict[tuple, float] = {}
 
     def cache_key(self) -> str:
-        return f"{self.name}|dtype={jnp.dtype(self.dtype).name}|repeats={self.repeats}"
+        mode = "|synthetic" if self.synthetic else ""
+        return f"{self.name}|dtype={self.dtype.name}|repeats={self.repeats}{mode}"
+
+    def spawn_spec(self) -> tuple[str, dict, str]:
+        return (
+            "xla_cpu",
+            {
+                "repeats": self.repeats,
+                "dtype": self.dtype.name,  # np.dtype pickles, but the name is stabler
+                "synthetic": self.synthetic,
+            },
+            "repro.accelerators.xla_cpu",
+        )
 
     def layer_types(self) -> tuple[str, ...]:
         return ("dense",)
@@ -52,23 +90,35 @@ class XLACPUPlatform(Platform):
     def defaults(self, layer_type: str) -> Config:
         return {"tokens": 64, "d_in": 256, "d_out": 256}
 
+    # ------------------------------------------------------------- measurement
     def measure(self, layer_type: str, cfg: Config) -> float:
         assert layer_type == "dense"
         key = (cfg["tokens"], cfg["d_in"], cfg["d_out"])
         if key in self._cache:
             return self._cache[key]
         m, k, n = key
+        t = self._synthetic_time(m, k, n) if self.synthetic else self._wallclock_time(m, k, n)
+        self._cache[key] = t
+        return t
+
+    def _synthetic_time(self, m: int, k: int, n: int) -> float:
+        """Deterministic stand-in: tile-padded GEMM time at a fixed rate."""
+        em = math.ceil(m / self.SYN_TILE_M) * self.SYN_TILE_M
+        ek = math.ceil(k / self.SYN_TILE_KN) * self.SYN_TILE_KN
+        en = math.ceil(n / self.SYN_TILE_KN) * self.SYN_TILE_KN
+        return 2.0 * em * ek * en / self.SYN_FLOPS + self.SYN_OVERHEAD_S
+
+    def _wallclock_time(self, m: int, k: int, n: int) -> float:
+        jnp, dense = _jit_dense()
         a = jnp.ones((m, k), self.dtype)
         b = jnp.ones((k, n), self.dtype)
-        _dense(m, k, n, a, b).block_until_ready()  # compile + warm up
+        dense(m, k, n, a, b).block_until_ready()  # compile + warm up
         samples = []
         for _ in range(self.repeats):
             t0 = time.perf_counter()
-            _dense(m, k, n, a, b).block_until_ready()
+            dense(m, k, n, a, b).block_until_ready()
             samples.append(time.perf_counter() - t0)
-        t = float(np.median(samples))
-        self._cache[key] = t
-        return t
+        return float(np.median(samples))
 
     def measure_batch(self, layer_type: str, batch: ConfigBatch) -> np.ndarray:
         """Wall-clock timing cannot vectorize; batch-level dedup is the win.

@@ -20,6 +20,7 @@ from repro.api.hub import EstimatorHub
 from repro.api.oracle import PerfOracle
 from repro.api.registry import get_platform, list_platforms, register_platform
 from repro.core.batch import ConfigBatch
+from repro.runtime import MeasurementRuntime, RunStats, RuntimeSpec
 
 __all__ = [
     "CachedPlatform",
@@ -28,7 +29,10 @@ __all__ = [
     "ConfigBatch",
     "EstimatorHub",
     "MeasurementCache",
+    "MeasurementRuntime",
     "PerfOracle",
+    "RunStats",
+    "RuntimeSpec",
     "get_platform",
     "list_platforms",
     "register_platform",

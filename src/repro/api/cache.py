@@ -21,6 +21,7 @@ platform's vectorized timing model.
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import time
@@ -64,8 +65,13 @@ class MeasurementCache:
         self._times: dict[tuple, float] = {}
         #: (platform, layer_type, threshold, n_points) -> (widths, n_meas)
         self._widths: dict[tuple, tuple[dict[str, int], int]] = {}
+        #: (platform, layer_type, widths, snap, batch fingerprint) -> features
+        self._feature_matrices: dict[tuple, np.ndarray] = {}
         self.hits = 0
         self.misses = 0
+        #: measurements preloaded from a journal replay (not hits, not misses)
+        self.replayed = 0
+        self.feature_hits = 0
         #: wall-clock seconds spent inside actual (miss) measurements
         self.measure_seconds = 0.0
 
@@ -128,6 +134,33 @@ class MeasurementCache:
             self._times[(platform,) + k] = t
         self.misses += len(batch)
 
+    def preload(
+        self, platform: str, layer_type: str, batch: ConfigBatch, seconds: np.ndarray
+    ) -> int:
+        """Insert measurements without touching hit/miss accounting.
+
+        This is the journal-replay entry point: replayed measurements were paid
+        for by a *previous* run, so they must not count as this run's misses
+        (and they are not hits either — nothing asked for them yet).
+
+        Unlike the live first-measurement-wins cache, preload deliberately
+        **overwrites** on duplicate keys: journals are chronological, and the
+        scheduler appends a superseding record when a retried chunk's merged
+        values replace a stale attempt's, so the *last* record for a key is
+        the value the writing run actually trained on.  Returns the number of
+        keys that were not already cached, so re-replaying the same journal is
+        idempotent.
+        """
+        seconds = np.asarray(seconds, dtype=np.float64)
+        new = 0
+        for k, t in zip(batch_keys(layer_type, batch), seconds.tolist()):
+            key = (platform,) + k
+            if key not in self._times:
+                new += 1
+            self._times[key] = t
+        self.replayed += new
+        return new
+
     @property
     def n_unique(self) -> int:
         return len(self._times)
@@ -153,6 +186,55 @@ class MeasurementCache:
         n_meas: int,
     ) -> None:
         self._widths[(platform, layer_type, threshold, n_points)] = (dict(widths), n_meas)
+
+    # --------------------------------------------------------- feature matrices
+    @staticmethod
+    def _feature_key(
+        platform: str,
+        layer_type: str,
+        widths: Mapping[str, int],
+        snap: bool,
+        batch: ConfigBatch,
+    ) -> tuple:
+        """Key for a snapped feature matrix: widths + a batch fingerprint.
+
+        The snapped features of a fixed test set depend only on the step
+        widths (which a campaign discovers once per layer type) and the batch
+        itself, so ``sampling_curve`` can re-evaluate at every training size
+        without re-featurizing.  The batch is fingerprinted by content hash —
+        cheap next to one featurization pass.
+        """
+        digest = hashlib.sha1(batch.values.tobytes()).hexdigest()
+        widths_key = tuple(sorted((p, int(w)) for p, w in widths.items()))
+        return (platform, layer_type, widths_key, bool(snap), batch.params,
+                batch.values.shape, digest)
+
+    def lookup_features(
+        self,
+        platform: str,
+        layer_type: str,
+        widths: Mapping[str, int],
+        snap: bool,
+        batch: ConfigBatch,
+    ) -> np.ndarray | None:
+        X = self._feature_matrices.get(
+            self._feature_key(platform, layer_type, widths, snap, batch)
+        )
+        if X is not None:
+            self.feature_hits += 1
+        return X
+
+    def store_features(
+        self,
+        platform: str,
+        layer_type: str,
+        widths: Mapping[str, int],
+        snap: bool,
+        batch: ConfigBatch,
+        X: np.ndarray,
+    ) -> None:
+        key = self._feature_key(platform, layer_type, widths, snap, batch)
+        self._feature_matrices[key] = np.asarray(X, dtype=np.float64)
 
     # ------------------------------------------------------------- persistence
     def save(self, path: str) -> None:
@@ -186,6 +268,8 @@ class MeasurementCache:
             "unique_measurements": self.n_unique,
             "hits": self.hits,
             "misses": self.misses,
+            "replayed": self.replayed,
+            "feature_hits": self.feature_hits,
             "measure_seconds": self.measure_seconds,
         }
 
@@ -197,11 +281,24 @@ class CachedPlatform(Platform):
     ``measure`` through the shared :class:`MeasurementCache`, so all pipeline
     stages (sweeps, PR-sample benchmarking, evaluation) share one pool of
     measurements.
+
+    When a :class:`~repro.runtime.MeasurementRuntime` is attached (``runtime``
+    attribute; ``Campaign.run(runtime=...)`` manages this), the miss sub-batch
+    is executed through the runtime's scheduler — sharded across workers,
+    journaled, retried — instead of calling the inner platform directly.
     """
 
-    def __init__(self, inner: Platform, cache: MeasurementCache | None = None) -> None:
+    def __init__(
+        self,
+        inner: Platform,
+        cache: MeasurementCache | None = None,
+        runtime=None,
+    ) -> None:
         self.inner = inner
         self.cache = cache if cache is not None else MeasurementCache()
+        #: optional MeasurementRuntime executing the misses (duck-typed to
+        #: avoid importing repro.runtime from this lower layer)
+        self.runtime = runtime
 
     # ---- capability description (delegated) ----------------------------------
     @property
@@ -231,12 +328,25 @@ class CachedPlatform(Platform):
     def measure(self, layer_type: str, cfg: Config) -> float:
         t = self.cache.lookup(self.inner.cache_key(), layer_type, cfg)
         if t is not None:
+            if self.runtime is not None:
+                self.runtime.stats.cached += 1
             return t
         t0 = time.perf_counter()
-        t = self.inner.measure(layer_type, cfg)
+        t = self._measure_miss(layer_type, cfg)
         self.cache.measure_seconds += time.perf_counter() - t0
         self.cache.store(self.inner.cache_key(), layer_type, cfg, t)
         return t
+
+    def _measure_miss(self, layer_type: str, cfg: Config) -> float:
+        """One uncached measurement, through the runtime when attached."""
+        if self.runtime is not None:
+            try:
+                batch = ConfigBatch.from_dicts([cfg])
+            except ValueError:
+                pass  # non-integer config: below the runtime's columnar floor
+            else:
+                return float(self.runtime.measure(layer_type, batch)[0])
+        return self.inner.measure(layer_type, cfg)
 
     def measure_batch(self, layer_type: str, batch: ConfigBatch) -> np.ndarray:
         """Cache-partitioned batch measurement.
@@ -248,10 +358,15 @@ class CachedPlatform(Platform):
         """
         key = self.inner.cache_key()
         times, miss_rows, miss_map = self.cache.lookup_many(key, layer_type, batch)
+        if self.runtime is not None:
+            self.runtime.stats.cached += len(batch) - int(miss_rows.size)
         if miss_rows.size:
             sub = batch.take(miss_rows)
             t0 = time.perf_counter()
-            y = self.inner.measure_batch(layer_type, sub)
+            if self.runtime is not None:
+                y = self.runtime.measure(layer_type, sub)
+            else:
+                y = self.inner.measure_batch(layer_type, sub)
             self.cache.measure_seconds += time.perf_counter() - t0
             self.cache.store_many(key, layer_type, sub, y)
             missing = miss_map >= 0

@@ -32,8 +32,9 @@ from repro.api.hub import EstimatorHub
 from repro.api.oracle import PerfOracle
 from repro.api.registry import get_platform
 from repro.core import prs, sweeps
+from repro.core.batch import ConfigBatch
 from repro.core.estimator import LayerEstimator
-from repro.core.forest import RandomForestRegressor
+from repro.core.forest import RandomForestRegressor, mape, rmspe
 
 
 def train_layer_estimator(
@@ -144,6 +145,8 @@ class Campaign:
         else:
             self.hub = None
         self.estimators: dict[str, LayerEstimator] = {}
+        #: RunStats snapshot of the last ``run(runtime=...)`` (None otherwise)
+        self.last_run_stats: dict[str, float] | None = None
 
     # ------------------------------------------------------------- step widths
     def discover_widths(
@@ -195,12 +198,57 @@ class Campaign:
             self.hub.save(self.platform.name, est)
         return est
 
-    def run(self, **oracle_kwargs) -> PerfOracle:
-        """Train every layer type in the spec and return the oracle."""
+    def _resolve_runtime(self, runtime):
+        """Normalize ``run``'s runtime argument to (runtime, owned-by-us)."""
+        if runtime is None:
+            return None, False
+        from repro.runtime import MeasurementRuntime, RuntimeSpec
+
+        if isinstance(runtime, RuntimeSpec):
+            if runtime.journal_path is None and self.hub is not None:
+                # Campaigns that persist estimators get crash-safe resume by
+                # default: the journal lives alongside the hub checkpoints.
+                # (journal_path="" opts out of journaling explicitly.)
+                from repro.checkpoint.manager import journal_path
+
+                runtime = dataclasses.replace(
+                    runtime, journal_path=journal_path(self.hub.directory)
+                )
+            return MeasurementRuntime(runtime, self.platform.inner), True
+        return runtime, False
+
+    def run(self, runtime=None, **oracle_kwargs) -> PerfOracle:
+        """Train every layer type in the spec and return the oracle.
+
+        ``runtime``: a :class:`repro.runtime.RuntimeSpec` (or a ready
+        :class:`~repro.runtime.MeasurementRuntime`) executing all cache misses
+        through the sharded scheduler — worker pool, retries, crash-safe
+        journal.  The journal is replayed into the measurement cache first, so
+        an interrupted run resumes with zero duplicate measurements.  Results
+        are bitwise-identical to the serial path for any worker count.
+        """
         layer_types = self.spec.layer_types or self.platform.layer_types()
-        for lt in layer_types:
-            if lt not in self.estimators:
-                self.train(lt)
+        rt, owned = self._resolve_runtime(runtime)
+        # Always reset: a runtime-less run after a run(runtime=...) must not
+        # stamp the previous run's stats onto the new oracle.
+        self.last_run_stats = None
+        if rt is not None:
+            self.platform.runtime = rt
+        try:
+            if rt is not None:
+                # Inside the try: an unreadable/corrupt-beyond-salvage journal
+                # must still tear down the freshly spawned worker pool.
+                rt.replay_into(self.cache)
+            for lt in layer_types:
+                if lt not in self.estimators:
+                    self.train(lt)
+        finally:
+            if rt is not None:
+                self.platform.runtime = None
+                self.last_run_stats = rt.stats.snapshot()
+                if owned:
+                    rt.close()
+        oracle_kwargs.setdefault("run_stats", self.last_run_stats)
         return PerfOracle(
             estimators=dict(self.estimators),
             platform_name=self.platform.name,
@@ -221,15 +269,45 @@ class Campaign:
         Step widths are discovered once and reused for every size; each entry
         reports ``sweeps_saved`` — the sweep measurements the old
         re-sweep-per-size pipeline would have spent by that point.
+
+        The shared test set is measured and featurized **once**: its snapped
+        feature matrix is memoized in the measurement cache (keyed by platform,
+        layer type, step widths and batch fingerprint), so every size after the
+        first skips the snap/featurize pass entirely.
         """
         sampling = sampling if sampling is not None else self.spec.sampling
+        snap = sampling != "random"
+        try:
+            test_batch = (
+                test_configs
+                if isinstance(test_configs, ConfigBatch)
+                else ConfigBatch.from_dicts(list(test_configs))
+            )
+        except ValueError:
+            test_batch = None  # ragged/non-integer test set: per-size evaluate
+        y_true: np.ndarray | None = None
         out = []
         sweep_cost = 0
         saved = 0
         for i, n in enumerate(sizes):
             t0 = time.perf_counter()
             est = self.train(layer_type, n_samples=n, sampling=sampling, seed=seed)
-            metrics = est.evaluate(self.platform, test_configs)
+            if test_batch is None:
+                metrics = est.evaluate(self.platform, test_configs)
+            else:
+                if y_true is None:
+                    y_true = self.platform.measure_many(layer_type, test_batch)
+                X = self.cache.lookup_features(
+                    self.platform.cache_key(), layer_type, est.widths, snap, test_batch
+                )
+                if X is None:
+                    X = est._features(test_batch, snap=snap)
+                    self.cache.store_features(
+                        self.platform.cache_key(), layer_type, est.widths, snap,
+                        test_batch, X,
+                    )
+                y_pred = est.predict_features(X)
+                metrics = {"mape": mape(y_true, y_pred), "rmspe": rmspe(y_true, y_pred)}
             if sampling != "random":
                 if i == 0:
                     # The widths cache has no entry when the widths never cost

@@ -38,6 +38,10 @@ class PerfOracle:
     #: documented per-launch overhead (gray-box knowledge)
     launch_overhead_s: float = 0.0
     platform_name: str = ""
+    #: provenance: RunStats snapshot of the campaign run that trained this
+    #: oracle (measured/cached/replayed counts, throughput); None when the
+    #: campaign ran without a measurement runtime or the oracle was reloaded.
+    run_stats: Mapping[str, float] | None = None
 
     # ------------------------------------------------------------ single layer
     def layer_types(self) -> tuple[str, ...]:

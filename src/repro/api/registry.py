@@ -45,6 +45,17 @@ def get_platform(name: str, **kwargs) -> Platform:
     return factory(**kwargs)
 
 
+def try_get_factory(name: str) -> Callable[..., Platform] | None:
+    """Registered factory or None — without importing the built-in platforms.
+
+    Runtime pool workers use this after importing their spawn spec's module:
+    the spec module has already registered the one platform the worker needs,
+    so e.g. a synthetic XLA-CPU worker never pays for the full accelerator
+    (and jax) imports.
+    """
+    return _REGISTRY.get(name)
+
+
 def list_platforms() -> tuple[str, ...]:
     _ensure_builtins()
     return tuple(sorted(_REGISTRY))

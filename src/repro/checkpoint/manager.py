@@ -27,8 +27,31 @@ import re
 import shutil
 from typing import Any
 
-import jax
 import numpy as np
+
+# jax is imported lazily inside save/restore: checkpoint directories also host
+# the measurement journal and estimator hubs, whose consumers (runtime pool
+# workers, pure-numpy campaigns) must not pay the jax import.
+
+
+def journal_path(directory: str, name: str = "measurements") -> str:
+    """Canonical measurement-journal location inside a checkpoint/hub dir.
+
+    The journal (see :class:`repro.runtime.MeasurementJournal`) lives next to
+    the artifacts it protects: kill a campaign mid-run and the next run in the
+    same directory resumes from it.
+    """
+    os.makedirs(directory, exist_ok=True)
+    return os.path.join(directory, f"{name}.jsonl")
+
+
+def _to_host(v: Any) -> np.ndarray:
+    """Gather one leaf to a host numpy array (jax only when actually needed)."""
+    if isinstance(v, (np.ndarray, np.generic, int, float, bool, list, tuple)):
+        return np.asarray(v)
+    import jax
+
+    return np.asarray(jax.device_get(v))
 
 
 def _flatten(tree: Any, prefix: str = "") -> dict[str, Any]:
@@ -59,10 +82,14 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
 
+    def journal_path(self, name: str = "measurements") -> str:
+        """Measurement-journal path alongside this manager's checkpoints."""
+        return journal_path(self.directory, name)
+
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: Any) -> str:
         flat = _flatten(tree)
-        arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+        arrays = {k: _to_host(v) for k, v in flat.items()}
         final = os.path.join(self.directory, f"step_{step:09d}")
         tmp = final + ".tmp"
         if os.path.exists(tmp):
@@ -117,6 +144,8 @@ class CheckpointManager:
             flat = {k: z[k] for k in z.files}
         tree = _unflatten(flat, skeleton)
         if shardings is not None:
+            import jax
+
             flat_t, treedef = jax.tree.flatten(tree)
             flat_s = jax.tree.leaves(shardings)
             flat_t = [jax.device_put(a, s) for a, s in zip(flat_t, flat_s)]

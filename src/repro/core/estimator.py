@@ -79,10 +79,19 @@ class LayerEstimator:
             return base
         return np.concatenate([base, extra], axis=1)
 
+    def predict_features(self, X: np.ndarray) -> np.ndarray:
+        """Predict from a pre-built (already snapped) feature matrix.
+
+        Lets callers that evaluate one test set against many trained forests
+        (``Campaign.sampling_curve``) reuse a memoized feature matrix instead
+        of re-snapping and re-featurizing per evaluation.
+        """
+        y = self.forest.predict(np.asarray(X, dtype=np.float64))
+        return np.exp(y) if self.log_target else y
+
     def predict(self, configs: Sequence[prs.Config] | ConfigBatch) -> np.ndarray:
         """Eq. 7/8: map to PR, then predict with the forest."""
-        y = self.forest.predict(self._features(configs, snap=True))
-        return np.exp(y) if self.log_target else y
+        return self.predict_features(self._features(configs, snap=True))
 
     def predict_one(self, cfg: prs.Config) -> float:
         return float(self.predict([cfg])[0])

@@ -77,13 +77,38 @@ def _linear_fit_rmse(x: np.ndarray, y: np.ndarray) -> float:
     return float(np.sqrt(np.mean((y - A @ coef) ** 2)))
 
 
+def _staircase_fit_rmse_multi(
+    x: np.ndarray, y: np.ndarray, widths: Sequence[int]
+) -> np.ndarray:
+    """Staircase-fit RMSE for several candidate widths in one vectorized pass.
+
+    For each width the sweep is partitioned into steps (``ceil(x / w)``) and
+    approximated by the per-step mean.  Instead of a Python loop over steps
+    (and over candidate widths), step boundaries come from ``diff != 0`` runs,
+    every candidate's group ids are offset into one disjoint id space, and a
+    single ``bincount`` produces all per-step means at once.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    if not np.all(np.diff(x) >= 0):  # run-detection needs ascending x
+        order = np.argsort(x, kind="stable")
+        x, y = x[order], y[order]
+    w = np.maximum(1, np.asarray(widths, dtype=np.int64))
+    g = np.ceil(x[None, :] / w[:, None]).astype(np.int64)  # (W, n), rows nondecreasing
+    starts = np.diff(g, axis=1) != 0
+    ids = np.concatenate(
+        [np.zeros((len(w), 1), dtype=np.int64), np.cumsum(starts, axis=1)], axis=1
+    )
+    offsets = np.concatenate([[0], np.cumsum(ids[:, -1] + 1)[:-1]])
+    flat = (ids + offsets[:, None]).ravel()
+    sums = np.bincount(flat, weights=np.tile(y, len(w)))
+    counts = np.bincount(flat)
+    y_hat = (sums / counts)[flat].reshape(len(w), x.size)
+    return np.sqrt(np.mean((y[None, :] - y_hat) ** 2, axis=1))
+
+
 def _staircase_fit_rmse(x: np.ndarray, y: np.ndarray, width: int) -> float:
-    g = np.ceil(x / max(1, width)).astype(np.int64)
-    y_hat = np.empty_like(y)
-    for gv in np.unique(g):
-        m = g == gv
-        y_hat[m] = float(np.mean(y[m]))
-    return float(np.sqrt(np.mean((y - y_hat) ** 2)))
+    return float(_staircase_fit_rmse_multi(x, y, [width])[0])
 
 
 def _detect_width(x: np.ndarray, y: np.ndarray, min_rel_height: float) -> int:
@@ -139,13 +164,17 @@ def find_step_width(
                 return 1  # non-linear but not step-wise
             # noise shifts individual peak positions by +-1; pick the
             # neighbouring width whose staircase fit explains the sweep best
+            # (all candidates scored in one vectorized pass; argmin keeps the
+            # first minimum like min(key=...) did, so ties break identically)
             cands = sorted({w for w in (width - 1, width, width + 1) if w >= 2})
-            width = min(cands, key=lambda w: _staircase_fit_rmse(xs, ys, w))
+            rmses = _staircase_fit_rmse_multi(xs, ys, cands)
+            best = int(np.argmin(rmses))
+            width = cands[best]
             if window == x.size:
                 return width  # full-window detection needs no extra validation
             # multi-scale detection: accept only if the staircase fit clearly
             # beats a straight line (guards against declaring steps on noise)
-            if _staircase_fit_rmse(xs, ys, width) < 0.7 * _linear_fit_rmse(xs, ys):
+            if rmses[best] < 0.7 * _linear_fit_rmse(xs, ys):
                 return width
             return 1
         window //= 2

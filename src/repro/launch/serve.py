@@ -52,14 +52,20 @@ def generate(cfg, params, prompts: np.ndarray, gen_len: int, extras: dict | None
 
 
 def estimate_decode_step(cfg, batch: int, seq_len: int,
-                         hub_dir: str | None = None, n_samples: int = 400) -> float:
+                         hub_dir: str | None = None, n_samples: int = 400,
+                         workers: int = 1, journal_dir: str | None = None) -> float:
     """PR-oracle estimate of one decode step's time on the TPU-v5e platform.
 
     Loads a persisted oracle from ``hub_dir`` when one is available there,
     otherwise trains a small campaign in-process (and persists it to
     ``hub_dir`` for next time, if given).
+
+    ``workers`` > 1 runs the campaign's measurements through the sharded
+    runtime (process pool + crash-safe journal; see :mod:`repro.runtime`);
+    ``journal_dir`` pins the journal location (defaults to ``hub_dir`` when a
+    hub is given).  A run killed mid-campaign resumes from the journal.
     """
-    from repro.api import Campaign, CampaignSpec, EstimatorHub, PerfOracle
+    from repro.api import Campaign, CampaignSpec, EstimatorHub, PerfOracle, RuntimeSpec
     from repro.core.network import decompose
     from repro.models.config import InputShape
 
@@ -78,7 +84,21 @@ def estimate_decode_step(cfg, batch: int, seq_len: int,
             platform_kwargs={"knowledge": "gray", "noise": 0.001},
             hub_dir=hub_dir,
         )
-        oracle = Campaign(spec).run()
+        runtime = None
+        if workers > 1 or journal_dir:
+            from repro.checkpoint.manager import journal_path
+
+            runtime = RuntimeSpec(
+                workers=workers,
+                journal_path=journal_path(journal_dir) if journal_dir else None,
+            )
+        campaign = Campaign(spec)
+        oracle = campaign.run(runtime=runtime)
+        if campaign.last_run_stats is not None:
+            s = campaign.last_run_stats
+            print(f"runtime: {s['measured']:.0f} measured, {s['cached']:.0f} cached, "
+                  f"{s['replayed']:.0f} replayed over {s['chunks']:.0f} chunks "
+                  f"({s['throughput_cfg_s']:.0f} cfg/s, workers={workers})")
     shape = InputShape(name="serve", seq_len=seq_len, global_batch=batch, kind="decode")
     blocks = decompose(cfg, shape, dp=1, tp=1)
     return oracle.predict_network(blocks)
@@ -97,6 +117,12 @@ def main() -> None:
                     help="estimate and exit without compiling/running the model")
     ap.add_argument("--hub-dir", default=None,
                     help="EstimatorHub directory to reload/persist the oracle")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="measurement worker processes for the estimate campaign "
+                         "(>1 enables the sharded runtime)")
+    ap.add_argument("--journal-dir", default=None,
+                    help="directory for the crash-safe measurement journal "
+                         "(interrupted estimate campaigns resume from it)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -104,7 +130,8 @@ def main() -> None:
         cfg = reduced(cfg)
     if args.estimate or args.estimate_only:
         t_step = estimate_decode_step(
-            cfg, args.batch, args.prompt_len + args.gen, hub_dir=args.hub_dir
+            cfg, args.batch, args.prompt_len + args.gen, hub_dir=args.hub_dir,
+            workers=args.workers, journal_dir=args.journal_dir,
         )
         print(f"oracle estimate (tpu_v5e[gray], dp=1 tp=1): "
               f"{t_step*1e3:.3f} ms/decode-step "

@@ -1,0 +1,144 @@
+"""MeasurementJournal: crash-safe, append-only record of completed measurements.
+
+Benchmarking time is the scarce resource the whole PR methodology conserves,
+so an interrupted campaign must never re-pay for measurements it already made.
+The journal is a JSONL file with one record per completed scheduler chunk::
+
+    {"v": 1, "platform": "<cache key>", "layer_type": "dense",
+     "params": ["tokens", "d_in"], "rows": [[16, 32], ...], "seconds": [...]}
+
+Each append is flushed and ``fsync``'d before the scheduler moves on, so after
+a crash the journal holds exactly the chunks whose measurements completed.  On
+the next run :meth:`replay_into` preloads the records into the campaign's
+:class:`~repro.api.cache.MeasurementCache` (via ``cache.preload``, which does
+not disturb hit/miss accounting), turning every journaled configuration into a
+cache hit — the run resumes with zero duplicate measurements.
+
+Truncated or corrupt lines (the tail of a crashed write, manual edits) are
+skipped with a warning instead of aborting the replay; everything before them
+is still recovered.  Python floats round-trip exactly through JSON, so a
+resumed campaign is bitwise-identical to an uninterrupted one.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import warnings
+from typing import Iterator
+
+import numpy as np
+
+from repro.core.batch import ConfigBatch
+
+RECORD_VERSION = 1
+_REQUIRED_KEYS = ("platform", "layer_type", "params", "rows", "seconds")
+
+
+class JournalCorruptionWarning(UserWarning):
+    """A journal line could not be parsed/validated and was skipped."""
+
+
+class MeasurementJournal:
+    """Append-only JSONL journal of ``(platform, layer_type, config) -> seconds``."""
+
+    def __init__(self, path: str) -> None:
+        self.path = path
+        self._fh = None
+
+    # ------------------------------------------------------------------ write
+    def _open(self):
+        if self._fh is None:
+            os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+            self._fh = open(self.path, "a", encoding="utf-8")
+        return self._fh
+
+    def append_chunk(
+        self, platform: str, layer_type: str, batch: ConfigBatch, seconds: np.ndarray
+    ) -> None:
+        """Durably record one measured chunk (write + flush + fsync)."""
+        if len(batch) == 0:
+            return
+        record = {
+            "v": RECORD_VERSION,
+            "platform": platform,
+            "layer_type": layer_type,
+            "params": list(batch.params),
+            "rows": batch.values.tolist(),
+            "seconds": np.asarray(seconds, dtype=np.float64).tolist(),
+        }
+        fh = self._open()
+        fh.write(json.dumps(record, separators=(",", ":")) + "\n")
+        fh.flush()
+        os.fsync(fh.fileno())
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self) -> "MeasurementJournal":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------- read
+    def iter_records(self) -> Iterator[dict]:
+        """Yield valid records; skip corrupt/truncated lines with a warning."""
+        if not os.path.exists(self.path):
+            return
+        with open(self.path, encoding="utf-8") as fh:
+            for lineno, line in enumerate(fh, start=1):
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    record = json.loads(line)
+                    if not isinstance(record, dict):
+                        raise ValueError("record is not an object")
+                    for key in _REQUIRED_KEYS:
+                        if key not in record:
+                            raise ValueError(f"missing key {key!r}")
+                    if len(record["rows"]) != len(record["seconds"]):
+                        raise ValueError("rows/seconds length mismatch")
+                    n_params = len(record["params"])
+                    for row in record["rows"]:
+                        if not isinstance(row, list) or len(row) != n_params:
+                            raise ValueError("malformed config row")
+                    # Values must parse too, or replay would abort mid-file on
+                    # e.g. a bit-flipped cell; raises ValueError on non-numeric.
+                    np.asarray(record["rows"], dtype=np.int64)
+                    np.asarray(record["seconds"], dtype=np.float64)
+                except (ValueError, TypeError) as exc:
+                    warnings.warn(
+                        f"{self.path}:{lineno}: skipping corrupt journal line ({exc})",
+                        JournalCorruptionWarning,
+                        stacklevel=2,
+                    )
+                    continue
+                yield record
+
+    def replay_into(self, cache) -> dict[str, int]:
+        """Preload journaled measurements into a ``MeasurementCache``.
+
+        Replay is **last-writer-wins** (``cache.preload`` overwrites): the
+        journal is chronological, and the scheduler appends a superseding
+        record when a retried chunk's merged values differ from what a stale
+        attempt journaled — the final record for a key is always the value
+        the run trained on.  Returns ``{"records": .., "rows": .., "new": ..}``
+        where ``new`` counts keys not already cached (re-replays are
+        idempotent).
+        """
+        records = rows = new = 0
+        for record in self.iter_records():
+            values = np.asarray(record["rows"], dtype=np.int64)
+            if values.size == 0:
+                continue
+            batch = ConfigBatch(params=tuple(record["params"]), values=values)
+            new += cache.preload(
+                record["platform"], record["layer_type"], batch, record["seconds"]
+            )
+            records += 1
+            rows += len(batch)
+        return {"records": records, "rows": rows, "new": new}

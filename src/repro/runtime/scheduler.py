@@ -1,0 +1,200 @@
+"""MeasurementScheduler: shard a miss sub-batch into chunks, dispatch, merge.
+
+The scheduler is the deterministic heart of the runtime: a batch of ``n``
+configurations is cut into contiguous chunks of ``chunk_size`` rows, every
+chunk is submitted to the executor up front (so a pool keeps all workers
+busy), and results are merged back **in chunk order** — i.e. in the batch's
+first-occurrence order.  Chunk boundaries depend only on ``chunk_size``, never
+on worker count or completion order, so a campaign produces bitwise-identical
+results with 1, 2 or 16 workers.
+
+Fault handling per chunk:
+
+* an executor failure (worker crash, measurement exception) or a gather
+  timeout (``chunk_timeout_s``) triggers a resubmit with exponential backoff,
+  up to ``max_retries`` times;
+* a chunk that exhausts its budget raises :class:`MeasurementError` — the
+  journal still holds every chunk that completed before it, so a re-run
+  resumes instead of starting over.
+
+Completed chunks are appended to the :class:`~repro.runtime.journal
+.MeasurementJournal` (fsync'd) the moment they *complete* — out of merge
+order when a pool finishes them out of order — so a kill loses only the
+chunks still in flight, never completed work.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.core.batch import ConfigBatch
+from repro.runtime.journal import MeasurementJournal
+from repro.runtime.stats import RunStats
+
+
+class MeasurementError(RuntimeError):
+    """A chunk failed permanently (retry budget exhausted)."""
+
+
+class MeasurementScheduler:
+    """Chunked, retrying dispatch of measurement batches over an executor."""
+
+    def __init__(
+        self,
+        executor,
+        journal: MeasurementJournal | None = None,
+        chunk_size: int = 64,
+        max_retries: int = 2,
+        retry_backoff_s: float = 0.05,
+        chunk_timeout_s: float | None = None,
+        stats: RunStats | None = None,
+    ) -> None:
+        self.executor = executor
+        self.journal = journal
+        self.chunk_size = max(1, int(chunk_size))
+        self.max_retries = int(max_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.chunk_timeout_s = chunk_timeout_s
+        self.stats = stats if stats is not None else RunStats()
+
+    def measure_batch(
+        self, platform_key: str, layer_type: str, batch: ConfigBatch
+    ) -> np.ndarray:
+        """Measure a whole batch; returns times aligned with ``batch`` rows."""
+        n = len(batch)
+        if n == 0:
+            return np.zeros(0, dtype=np.float64)
+        bounds = [(a, min(a + self.chunk_size, n)) for a in range(0, n, self.chunk_size)]
+        subs = [
+            ConfigBatch(params=batch.params, values=batch.values[a:b]) for a, b in bounds
+        ]
+        # A pool wants every chunk queued up front so all workers stay busy; a
+        # serial executor measures *at submit time*, so eager submission would
+        # complete the whole batch before the first journal append — one chunk
+        # at a time keeps the journal's loses-at-most-one-chunk guarantee.
+        prefetch = getattr(self.executor, "workers", 1) > 1
+        t0 = time.perf_counter()
+        futures: list = [None] * len(bounds)
+        out = np.empty(n, dtype=np.float64)
+        # Durability is per *completed* chunk, not per merged chunk: with a
+        # pool, chunks finish out of order while the merge loop blocks on the
+        # oldest one, so successful futures journal themselves immediately via
+        # done-callbacks.  The merge loop stays authoritative: a timed-out
+        # attempt may complete late and journal values the run then discards
+        # in favour of its retry, so the merge loop appends a *superseding*
+        # record whenever the journaled values differ from the values actually
+        # merged (journal replay is last-writer-wins), and ``finalized``
+        # blocks any straggler callback from journaling after that.
+        journal_lock = threading.Lock()
+        journaled: dict[int, np.ndarray] = {}
+        finalized: set[int] = set()
+
+        def journal_chunk(index: int, y: np.ndarray, authoritative: bool) -> None:
+            if self.journal is None:
+                return
+            with journal_lock:
+                if authoritative:
+                    previous = journaled.get(index)
+                    if previous is None or not np.array_equal(previous, y):
+                        self.journal.append_chunk(platform_key, layer_type, subs[index], y)
+                        journaled[index] = y
+                    finalized.add(index)
+                elif index not in finalized and index not in journaled:
+                    self.journal.append_chunk(platform_key, layer_type, subs[index], y)
+                    journaled[index] = y
+
+        def completion_callback(index: int):
+            def callback(fut) -> None:
+                if fut.cancelled() or fut.exception() is not None:
+                    return
+                y = np.asarray(fut.result(), dtype=np.float64)
+                if y.shape != (len(subs[index]),):
+                    return  # malformed result: the merge loop will retry it
+                try:
+                    journal_chunk(index, y, authoritative=False)
+                except Exception:
+                    pass  # append errors re-raise from the merge loop's call
+            return callback
+
+        try:
+            if prefetch:
+                self.stats.in_flight += len(bounds)
+                for index, sub in enumerate(subs):
+                    futures[index] = self._submit(layer_type, sub)
+                    if self.journal is not None:
+                        futures[index].add_done_callback(completion_callback(index))
+            for index, (a, b) in enumerate(bounds):
+                if not prefetch:
+                    self.stats.in_flight += 1
+                    futures[index] = self._submit(layer_type, subs[index])
+                y = self._gather(layer_type, subs[index], futures[index], index)
+                out[a:b] = y
+                self.stats.in_flight -= 1
+                self.stats.chunks += 1
+                self.stats.measured += b - a
+                journal_chunk(index, y, authoritative=True)
+        finally:
+            # On abort the remaining submissions are moot; don't leave the
+            # progress surface claiming they are still in flight.
+            self.stats.in_flight = 0
+            self.stats.measure_seconds += time.perf_counter() - t0
+        return out
+
+    # ---------------------------------------------------------------- internals
+    def _submit(self, layer_type: str, sub: ConfigBatch):
+        """Submit one chunk; rebuild a broken pool once before giving up.
+
+        ``ProcessPoolExecutor.submit`` raises ``BrokenProcessPool`` *at submit*
+        once any worker has died abruptly (OOM-kill, segfault).  Executors that
+        can recover expose ``respawn()``; one respawn-and-retry turns a single
+        worker death into an ordinary chunk retry instead of a lost run.
+        """
+        try:
+            return self.executor.submit(layer_type, sub)
+        except Exception:
+            respawn = getattr(self.executor, "respawn", None)
+            if respawn is None:
+                raise
+            respawn()
+            return self.executor.submit(layer_type, sub)
+
+    def _gather(self, layer_type: str, sub: ConfigBatch, future, index: int) -> np.ndarray:
+        attempt = 0
+        while True:
+            # A resubmission lands at the back of the pool's queue, behind
+            # every still-prefetched chunk, so a fixed timeout would burn the
+            # whole retry budget on queue wait alone.  Scale the gather window
+            # by the number of chunks ahead of it (first attempts already ran
+            # concurrently, so they keep the configured timeout).
+            timeout = self.chunk_timeout_s
+            if timeout is not None and attempt > 0:
+                timeout = timeout * (1 + max(0, self.stats.in_flight))
+            try:
+                y = np.asarray(future.result(timeout=timeout), dtype=np.float64)
+                if y.shape != (len(sub),):
+                    raise ValueError(
+                        f"executor returned shape {y.shape} for a {len(sub)}-row chunk"
+                    )
+                return y
+            except Exception as exc:  # TimeoutError included; KeyboardInterrupt not
+                attempt += 1
+                if attempt > self.max_retries:
+                    self.stats.failures += 1
+                    raise MeasurementError(
+                        f"chunk {index} of {layer_type!r} ({len(sub)} configs) "
+                        f"failed after {attempt} attempt(s): {exc}"
+                    ) from exc
+                self.stats.retries += 1
+                future.cancel()
+                time.sleep(self.retry_backoff_s * (2 ** (attempt - 1)))
+                try:
+                    future = self._submit(layer_type, sub)
+                except Exception as submit_exc:
+                    self.stats.failures += 1
+                    raise MeasurementError(
+                        f"chunk {index} of {layer_type!r} could not be resubmitted "
+                        f"after a failed attempt: {submit_exc}"
+                    ) from submit_exc

@@ -1,0 +1,128 @@
+"""Measurement executors: in-process serial and ``concurrent.futures`` pool.
+
+Both expose the same two-method surface the scheduler drives::
+
+    submit(layer_type, batch) -> Future[np.ndarray]   # one chunk
+    close()
+
+:class:`SerialExecutor` measures on the in-process platform object — the
+right choice for white-box analytical timing models, whose "measurements" are
+cheap array math.  :class:`WorkerPool` fans chunks out across worker
+*processes* for real-hardware platforms (XLA-CPU today, GPU/TPU next) whose
+measurements hold the GIL or an entire device.
+
+Platforms cannot generally be pickled (jitted closures, device handles), so a
+pool worker rebuilds its own instance from the platform's *spawn spec* —
+``(registry_name, ctor_kwargs, module)`` from
+:meth:`repro.accelerators.base.Platform.spawn_spec`.  The worker imports
+``module`` (which registers the platform) and instantiates it through the
+registry, without importing the other built-in accelerators; a synthetic
+XLA-CPU worker never even imports jax.
+"""
+
+from __future__ import annotations
+
+import importlib
+import multiprocessing
+from concurrent.futures import Future, ProcessPoolExecutor
+
+import numpy as np
+
+from repro.core.batch import ConfigBatch
+
+#: per-worker-process platform instance, built once by the pool initializer
+_WORKER_PLATFORM = None
+
+
+def _init_worker(spec) -> None:
+    """Pool initializer: rebuild the platform from its spawn spec."""
+    global _WORKER_PLATFORM
+    name, kwargs, module = spec
+    if module:
+        importlib.import_module(module)
+    # Imported here, not at module top: the parent may construct a WorkerPool
+    # while repro.api is still initializing, and workers should resolve the
+    # factory registered by `module` without loading every built-in platform.
+    from repro.api import registry
+
+    factory = registry.try_get_factory(name)
+    if factory is not None:
+        _WORKER_PLATFORM = factory(**dict(kwargs))
+    else:
+        _WORKER_PLATFORM = registry.get_platform(name, **dict(kwargs))
+
+
+def _measure_chunk(layer_type: str, params: tuple, values: np.ndarray) -> np.ndarray:
+    """Worker-side entry point: measure one chunk on the per-process platform."""
+    batch = ConfigBatch(params=tuple(params), values=np.asarray(values, dtype=np.int64))
+    return np.asarray(_WORKER_PLATFORM.measure_batch(layer_type, batch), dtype=np.float64)
+
+
+class SerialExecutor:
+    """In-process executor: measures eagerly at submit time.
+
+    Exceptions are captured on the returned future (not raised at submit), so
+    the scheduler's retry/failure handling sees both executors identically.
+    """
+
+    workers = 1
+
+    def __init__(self, platform) -> None:
+        self.platform = platform
+
+    def submit(self, layer_type: str, batch: ConfigBatch) -> Future:
+        future: Future = Future()
+        try:
+            future.set_result(
+                np.asarray(self.platform.measure_batch(layer_type, batch), dtype=np.float64)
+            )
+        except Exception as exc:
+            future.set_exception(exc)
+        return future
+
+    def close(self) -> None:
+        pass
+
+
+class WorkerPool:
+    """``ProcessPoolExecutor`` over platform instances rebuilt from a spawn spec.
+
+    ``mp_context`` defaults to ``"spawn"``: fork is unsafe once device runtimes
+    (XLA) are initialized in the parent, and spawn workers re-import only the
+    spec's module, keeping them light.
+    """
+
+    def __init__(self, spec, workers: int, mp_context: str = "spawn") -> None:
+        name, kwargs, module = spec
+        self.spec = (name, dict(kwargs), module)
+        self.workers = int(workers)
+        self.mp_context = mp_context
+        self.respawns = 0
+        self._pool = self._make_pool()
+
+    def _make_pool(self) -> ProcessPoolExecutor:
+        return ProcessPoolExecutor(
+            max_workers=self.workers,
+            mp_context=multiprocessing.get_context(self.mp_context),
+            initializer=_init_worker,
+            initargs=(self.spec,),
+        )
+
+    def submit(self, layer_type: str, batch: ConfigBatch) -> Future:
+        return self._pool.submit(_measure_chunk, layer_type, batch.params, batch.values)
+
+    def respawn(self) -> None:
+        """Replace a broken pool (a worker died abruptly) with a fresh one.
+
+        Futures pending on the old pool fail with ``BrokenProcessPool``; the
+        scheduler's per-chunk retry resubmits them here.
+        """
+        self._pool.shutdown(wait=False, cancel_futures=True)
+        self.respawns += 1
+        self._pool = self._make_pool()
+
+    def close(self) -> None:
+        # wait=False: a wedged worker (the very thing chunk_timeout_s exists
+        # to survive) must not turn teardown into a hang; idle workers exit on
+        # their own and abandoned processes die with the parent.
+        self._pool.shutdown(wait=False, cancel_futures=True)

@@ -74,3 +74,44 @@ def test_detect_pr_points():
     x = np.arange(1, 33)
     prs = steps.detect_pr_points(x, staircase(x, 8), 8)
     assert list(prs) == [8, 16, 24, 32]
+
+
+class TestVectorizedStaircaseFit:
+    """The bincount-vectorized staircase fit matches a per-step reference loop."""
+
+    @staticmethod
+    def _reference_rmse(x, y, width):
+        g = np.ceil(x / max(1, width)).astype(np.int64)
+        y_hat = np.empty_like(y)
+        for gv in np.unique(g):
+            m = g == gv
+            y_hat[m] = float(np.mean(y[m]))
+        return float(np.sqrt(np.mean((y - y_hat) ** 2)))
+
+    @pytest.mark.parametrize("width", [2, 5, 8, 17, 200])
+    def test_matches_reference_loop(self, width):
+        x = np.arange(1, 97).astype(np.float64)
+        y = staircase(x, 8, noise=0.05)
+        ref = self._reference_rmse(x, y, width)
+        vec = steps._staircase_fit_rmse(x, y, width)
+        assert vec == pytest.approx(ref, rel=1e-12, abs=1e-15)
+
+    def test_multi_equals_per_width_calls(self):
+        x = np.arange(1, 129).astype(np.float64)
+        y = staircase(x, 16, noise=0.02, seed=3)
+        widths = [2, 3, 7, 15, 16, 17, 64]
+        multi = steps._staircase_fit_rmse_multi(x, y, widths)
+        for w, r in zip(widths, multi):
+            assert r == pytest.approx(self._reference_rmse(x, y, w), rel=1e-12)
+
+    def test_offset_window_and_unsorted_x(self):
+        # windows anchored mid-range, plus a shuffled copy (the vectorized fit
+        # sorts internally; grouping must not depend on input order)
+        x = np.arange(1000, 1128).astype(np.float64)
+        y = staircase(x, 32, noise=0.01, seed=1)
+        ref = self._reference_rmse(x, y, 32)
+        assert steps._staircase_fit_rmse(x, y, 32) == pytest.approx(ref, rel=1e-12)
+        order = np.random.default_rng(0).permutation(x.size)
+        assert steps._staircase_fit_rmse(x[order], y[order], 32) == pytest.approx(
+            ref, rel=1e-12
+        )
