@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench bench-engine bench-runtime quickstart
+.PHONY: test bench-smoke bench bench-engine bench-runtime bench-forest quickstart
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -14,6 +14,9 @@ bench-engine:
 
 bench-runtime:
 	$(PYTHON) -m benchmarks.bench_runtime
+
+bench-forest:
+	$(PYTHON) -m benchmarks.bench_forest
 
 bench:
 	$(PYTHON) -m benchmarks.run

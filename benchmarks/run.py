@@ -16,6 +16,7 @@ import traceback
 from benchmarks import (
     advisor_bench,
     bench_engine,
+    bench_forest,
     fig2_sweeps,
     fig4to7_curves,
     roofline_report,
@@ -33,6 +34,8 @@ SUITES = {
     "roofline": roofline_report.main,
     "advisor": advisor_bench.main,
     "engine": bench_engine.main,
+    # argv=[] so the harness's own CLI names don't reach bench_forest's parser
+    "forest": lambda: bench_forest.main([]),
 }
 
 

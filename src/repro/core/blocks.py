@@ -88,13 +88,34 @@ def fit_fusing_model(
     estimators: Mapping[str, LayerEstimator],
     blocks: Sequence[Block],
 ) -> FusingModel:
-    """Fit w_beta, c_beta from measured block configurations (Eq. 10/11)."""
+    """Fit w_beta, c_beta from measured block configurations (Eq. 10/11).
+
+    Measurements include each block's collective payload
+    (``collective_bytes``), matching how ``simulate_network`` and
+    ``evaluate_networks`` measure ground truth — fitting against
+    collectives-free block times would mis-fit ``f_beta`` for blocks that
+    move bytes on the interconnect.  The summed single-layer estimates come
+    from one batched :meth:`~repro.api.oracle.PerfOracle.predict` per layer
+    type (via ``PerfOracle.layer_times``), not a
+    per-layer ``predict_one`` loop.
+    """
+    if not hasattr(platform, "measure_block"):
+        raise TypeError(
+            f"platform {getattr(platform, 'name', platform)!r} does not "
+            "implement measure_block(); cannot measure fusing-model ground "
+            "truth (Eq. 10/11)"
+        )
+    from repro.api.oracle import PerfOracle
+
+    oracle = PerfOracle(estimators=estimators)
+    layer_times = oracle.layer_times(blocks)
     f_targets = []
     ops = []
-    for b in blocks:
-        t_meas = platform.measure_block(list(b.layers))
-        t_sum = sum(estimators[lt].predict_one(cfg) for lt, cfg in b.layers)
-        f_targets.append(t_sum - t_meas)
+    for b, times in zip(blocks, layer_times):
+        t_meas = platform.measure_block(
+            list(b.layers), collective_bytes=b.collective_bytes
+        )
+        f_targets.append(sum(times) - t_meas)
         ops.append(block_ops(b))
     A = np.stack([np.asarray(ops), np.ones(len(ops))], axis=1)
     coef, *_ = np.linalg.lstsq(A, np.asarray(f_targets), rcond=None)
@@ -140,12 +161,26 @@ class NetworkEstimator:
     def evaluate_networks(
         self, platform: Platform, networks: Sequence[Sequence[Block]]
     ) -> dict[str, float]:
+        """MAPE/RMSPE of whole-network estimates against measured ground truth.
+
+        Raises ``TypeError`` when the platform cannot measure blocks: the old
+        behavior silently accumulated ``0.0`` ground truth and returned
+        nan/inf error metrics, which read like a (spectacularly bad or good)
+        result instead of a broken setup.
+        """
+        if not hasattr(platform, "measure_block"):
+            raise TypeError(
+                f"platform {getattr(platform, 'name', platform)!r} does not "
+                "implement measure_block(); cannot measure whole-network "
+                "ground truth for evaluation"
+            )
         y_true, y_pred = [], []
         for net in networks:
             t = 0.0
             for b in net:
-                t += platform.measure_block(list(b.layers), collective_bytes=b.collective_bytes) * b.repeat \
-                    if hasattr(platform, "measure_block") else 0.0
+                t += platform.measure_block(
+                    list(b.layers), collective_bytes=b.collective_bytes
+                ) * b.repeat
             y_true.append(t)
             y_pred.append(self.predict_network(net))
         y_true, y_pred = np.asarray(y_true), np.asarray(y_pred)

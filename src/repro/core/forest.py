@@ -11,6 +11,14 @@ are stacked into padded ``(n_trees, max_nodes)`` arrays so one descent loop
 advances every (tree, sample) pair at once instead of looping tree by tree.
 The per-tree accumulation order is preserved, so predictions stay bitwise
 equal to the historical per-tree loop.
+
+Forest *fitting* is likewise vectorized (:mod:`repro.core.forest_fit`): each
+tree argsorts the bootstrapped matrix once, children inherit sorted orders by
+stable partition, and the split criterion is evaluated for all candidate
+features of a node in one stacked pass.  :func:`_build_tree` below is the
+frozen scalar reference builder the engine must match bitwise — it is kept
+(unused by ``fit``) as the parity baseline for tests/test_forest_fit.py and
+benchmarks/bench_forest.py.
 """
 
 from __future__ import annotations
@@ -18,6 +26,8 @@ from __future__ import annotations
 import dataclasses
 
 import numpy as np
+
+from repro.core import forest_fit
 
 
 @dataclasses.dataclass
@@ -103,6 +113,13 @@ def _build_tree(
     min_samples_leaf: int,
     max_features: int,
 ) -> _Tree:
+    """Frozen scalar reference builder (pre-vectorization).
+
+    ``fit`` grows trees through :func:`repro.core.forest_fit.grow_tree`; this
+    implementation is the bitwise-parity baseline it is tested and benched
+    against.  Do not "optimize" it — its per-node argsorts and sequential
+    feature scan define the contract.
+    """
     n_samples, n_features = X.shape
     feature: list[int] = []
     threshold: list[float] = []
@@ -223,6 +240,24 @@ class RandomForestRegressor:
         return self.__stack
 
     def _n_features_per_split(self, n_features: int) -> int:
+        """Candidate features drawn per split, sklearn-compatible semantics.
+
+        The *type* of ``max_features`` selects the rule, exactly as in
+        sklearn's ``RandomForestRegressor``:
+
+        * ``"sqrt"`` — ``max(1, int(sqrt(n_features)))``;
+        * a ``float`` is a **fraction** of the feature count —
+          ``max_features=1.0`` means *all* features (the regression-forest
+          default), ``0.5`` means half, rounded to nearest;
+        * an ``int`` is an absolute **count** — ``max_features=1`` draws a
+          single candidate feature per split (maximally randomized trees),
+          which is very different from ``1.0``.
+
+        Pinned by tests/test_forest.py::test_max_features_semantics — beware
+        that ``bool`` is an ``int`` subclass and Python's ``1 == 1.0``: the
+        branch order here (string, then float, then int) is what keeps the
+        two ``1`` spellings distinct.
+        """
         mf = self.max_features
         if mf == "sqrt":
             return max(1, int(np.sqrt(n_features)))
@@ -244,8 +279,15 @@ class RandomForestRegressor:
                 idx = rng.integers(0, n, size=n)
             else:
                 idx = np.arange(n)
-            tree = _build_tree(
-                X[idx], y[idx], rng, self.max_depth, self.min_samples_leaf, mf
+            # Vectorized growth (shared argsorts + stacked split search);
+            # bitwise-identical to the frozen ``_build_tree`` reference.  The
+            # bootstrap draw stays inside the loop: it shares the generator
+            # with the per-node feature draws, so hoisting it would shift
+            # every subsequent draw (see forest_fit's module docstring).
+            tree = _Tree(
+                *forest_fit.grow_tree(
+                    X[idx], y[idx], rng, self.max_depth, self.min_samples_leaf, mf
+                )
             )
             self._trees.append(tree)
         return self
@@ -263,15 +305,41 @@ class RandomForestRegressor:
         return acc / len(self._trees)
 
 
+#: percentage errors divide by ``y_true``; ground truth this close to zero
+#: (measured times are >= microseconds) means broken inputs, not fast layers
+_DENOM_EPS = 1e-12
+
+
+def _check_denominator(y_true: np.ndarray, metric: str) -> None:
+    bad = int(np.count_nonzero(~(np.abs(y_true) > _DENOM_EPS)))
+    if bad:
+        raise ValueError(
+            f"{metric}: y_true contains {bad} zero/near-zero value(s) "
+            f"(|y| <= {_DENOM_EPS:g}) out of {y_true.size}; percentage error "
+            "is undefined — check that the platform actually measured these "
+            "configurations"
+        )
+
+
 def mape(y_true: np.ndarray, y_pred: np.ndarray) -> float:
-    """Mean absolute percentage error (paper's headline metric), in percent."""
+    """Mean absolute percentage error (paper's headline metric), in percent.
+
+    Raises ``ValueError`` when ``y_true`` carries zero/near-zero entries: the
+    headline metric must never be silently nan/inf (a platform returning 0.0
+    ground truth is a measurement bug, not a fast configuration).
+    """
     y_true = np.asarray(y_true, dtype=np.float64)
     y_pred = np.asarray(y_pred, dtype=np.float64)
+    _check_denominator(y_true, "mape")
     return float(np.mean(np.abs((y_pred - y_true) / y_true)) * 100.0)
 
 
 def rmspe(y_true: np.ndarray, y_pred: np.ndarray) -> float:
-    """Root-mean-square percentage error, in percent."""
+    """Root-mean-square percentage error, in percent.
+
+    Same zero/near-zero ``y_true`` guard as :func:`mape`.
+    """
     y_true = np.asarray(y_true, dtype=np.float64)
     y_pred = np.asarray(y_pred, dtype=np.float64)
+    _check_denominator(y_true, "rmspe")
     return float(np.sqrt(np.mean(((y_pred - y_true) / y_true) ** 2)) * 100.0)

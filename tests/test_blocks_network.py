@@ -101,3 +101,57 @@ def test_decompose_hybrid_has_both():
     blocks = decompose(get_config("zamba2-2.7b"), SHAPES["train_4k"], 16, 16)
     kinds = {b.kind for b in blocks}
     assert "ssd" in kinds and "attn" in kinds
+
+
+class _NoMeasureBlockPlatform:
+    """Duck-typed platform missing measure_block entirely."""
+
+    name = "no-measure-block"
+
+
+def test_evaluate_networks_raises_without_measure_block():
+    """A platform without measure_block must raise, not return nan/inf.
+
+    The old ternary silently accumulated 0.0 ground truth, making mape
+    divide by zero and report nan/inf as if it were a result.
+    """
+    class Fake:
+        def predict_one(self, cfg):
+            return cfg["t"]
+
+    est = NetworkEstimator(estimators={"x": Fake()})
+    net = [Block(kind="seq", layers=(("x", {"t": 1.0}),))]
+    with pytest.raises(TypeError, match="measure_block"):
+        est.evaluate_networks(_NoMeasureBlockPlatform(), [net])
+
+
+def test_fit_fusing_model_raises_without_measure_block(dense_est):
+    with pytest.raises(TypeError, match="measure_block"):
+        fit_fusing_model(_NoMeasureBlockPlatform(), dense_est, _mlp_blocks(3, np.random.default_rng(0)))
+
+
+def test_fit_fusing_model_measures_with_collectives(tpu, dense_est):
+    """f_beta must be fitted against collectives-inclusive block times, the
+    same ground truth simulate_network/evaluate_networks measure."""
+    rng = np.random.default_rng(2)
+    blocks = []
+    for b in _mlp_blocks(40, rng):
+        blocks.append(Block(kind=b.kind, layers=b.layers, collective_bytes=2e8))
+    got = fit_fusing_model(tpu, dense_est, blocks)
+
+    # expected fit computed directly against collectives-inclusive times
+    from repro.core.blocks import block_ops
+    f_targets, ops = [], []
+    for b in blocks:
+        t_meas = tpu.measure_block(list(b.layers), collective_bytes=b.collective_bytes)
+        t_sum = sum(dense_est["dense"].predict_one(cfg) for _, cfg in b.layers)
+        f_targets.append(t_sum - t_meas)
+        ops.append(block_ops(b))
+    A = np.stack([np.asarray(ops), np.ones(len(ops))], axis=1)
+    coef, *_ = np.linalg.lstsq(A, np.asarray(f_targets), rcond=None)
+    assert got.w == pytest.approx(float(coef[0]), rel=1e-12, abs=1e-30)
+    assert got.c == pytest.approx(float(coef[1]), rel=1e-12, abs=1e-30)
+
+    # and collectives change the fit: ignoring them would mis-fit c_beta
+    plain = fit_fusing_model(tpu, dense_est, _mlp_blocks(40, np.random.default_rng(2)))
+    assert got.c != pytest.approx(plain.c, rel=1e-6)

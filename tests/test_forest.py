@@ -48,3 +48,49 @@ def test_metrics():
     yp = np.array([1.1, 1.8, 4.0])
     assert abs(mape(y, yp) - np.mean([10, 10, 0])) < 1e-9
     assert rmspe(y, yp) >= mape(y, yp) - 1e-9
+
+
+@pytest.mark.parametrize("metric", [mape, rmspe])
+def test_metrics_reject_zero_ground_truth(metric):
+    """Percentage errors must raise on zero/near-zero y_true, naming the
+    offending count, instead of silently returning nan/inf."""
+    yp = np.array([1.0, 2.0, 3.0])
+    with pytest.raises(ValueError, match="1 zero/near-zero"):
+        metric(np.array([1.0, 0.0, 3.0]), yp)
+    with pytest.raises(ValueError, match="2 zero/near-zero"):
+        metric(np.array([1e-15, 0.0, 3.0]), yp)
+    # legitimately small measured times (microseconds) stay fine
+    assert np.isfinite(metric(np.array([1e-6, 2e-6, 3e-6]), yp * 1e-6))
+
+
+def test_max_features_semantics():
+    """sklearn-compatible: float 1.0 = all features, int 1 = one feature,
+    "sqrt" = isqrt. The two spellings of ``1`` must stay distinct."""
+    f = RandomForestRegressor(max_features=1.0)
+    assert f._n_features_per_split(9) == 9
+    assert f._n_features_per_split(4) == 4
+    f = RandomForestRegressor(max_features=1)
+    assert f._n_features_per_split(9) == 1
+    assert f._n_features_per_split(4) == 1
+    f = RandomForestRegressor(max_features="sqrt")
+    assert f._n_features_per_split(9) == 3
+    assert f._n_features_per_split(4) == 2
+    assert f._n_features_per_split(2) == 1
+    f = RandomForestRegressor(max_features=0.5)
+    assert f._n_features_per_split(8) == 4
+
+
+def test_max_features_int_one_trains_single_feature_splits():
+    """max_features=1 (int) draws one candidate per split; the resulting
+    forest differs from max_features=1.0 (all candidates) on the same data."""
+    rng = np.random.default_rng(4)
+    X = rng.integers(0, 32, size=(300, 4)).astype(float)
+    y = X[:, 0] * 100.0 + X[:, 1]
+    f_all = RandomForestRegressor(n_estimators=4, max_depth=6, seed=0, max_features=1.0).fit(X, y)
+    f_one = RandomForestRegressor(n_estimators=4, max_depth=6, seed=0, max_features=1).fit(X, y)
+    # all-features trees should almost always split the dominant feature 0
+    # at the root; single-candidate trees are forced onto random features
+    roots_all = {int(t.feature[0]) for t in f_all._trees}
+    roots_one = {int(t.feature[0]) for t in f_one._trees}
+    assert roots_all == {0}
+    assert roots_one != {0}
