@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench bench-engine bench-runtime bench-forest quickstart
+.PHONY: test bench-smoke bench bench-engine bench-runtime bench-forest bench-blocks quickstart
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -17,6 +17,9 @@ bench-runtime:
 
 bench-forest:
 	$(PYTHON) -m benchmarks.bench_forest
+
+bench-blocks:
+	$(PYTHON) -m benchmarks.bench_blocks
 
 bench:
 	$(PYTHON) -m benchmarks.run

@@ -1,0 +1,332 @@
+"""Whole-network block path: columnar BlockBatch engine vs the scalar loop.
+
+The paper's Eq. 9-12 stage measures ~500 multi-layer block configurations per
+block type for fusing-factor calibration, then measures whole networks for
+evaluation.  Before this engine, every one of those blocks went through a
+scalar ``platform.measure_block`` Python loop with no caching; now a
+calibration set is built columnar-natively (``BlockBatch.from_template`` —
+blocks never exist as dicts on this path) and measured through the
+platform's vectorized block model behind the block-level measurement cache,
+which also dedups the repeated blocks that depth-stacked networks produce.
+
+Times three stages on ``tpu_v5e`` (white box) against frozen copies of the
+pre-refactor loops, asserting bitwise parity on every number before reporting
+speedups, then runs a 2-worker block-calibration mini-campaign (process pool
++ journal) and asserts crash-safe-resume semantics (zero re-measurements).
+Writes ``BENCH_blocks.json``::
+
+    PYTHONPATH=src python -m benchmarks.bench_blocks [--smoke]
+
+The gated number is the block-measurement path (``REPRO_BLOCKS_MIN_SPEEDUP``,
+default 3.0; CI relaxes it to 1.5 for contended shared runners) — the
+in-bench parity asserts are the hard invariant.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.api import CachedPlatform, Campaign, CampaignSpec, PerfOracle, RuntimeSpec
+from repro.core.batch import BlockBatch, ConfigBatch
+from repro.core.blocks import block_ops, fit_fusing_model
+from repro.core.forest import mape, rmspe
+
+OUT_PATH = "BENCH_blocks.json"
+SEED = 0
+
+
+# ----------------------------------------------------------------- workload
+def _dup_sample(r, pools: dict[str, np.ndarray], n: int, dup: float) -> dict[str, np.ndarray]:
+    """n rows drawn from ~n*(1-dup) unique combinations (depth-stacked
+    networks repeat block shapes; the duplicate share is the realistic part
+    of the workload the cache exists for)."""
+    n_unique = max(1, int(n * (1.0 - dup)))
+    uniq = {p: vals[r.integers(0, len(vals), n_unique)] for p, vals in pools.items()}
+    idx = np.concatenate([np.arange(n_unique), r.integers(0, n_unique, n - n_unique)])
+    return {p: col[idx] for p, col in uniq.items()}
+
+
+def _calibration_templates(n_per_kind: int, dup: float = 0.4) -> dict[str, BlockBatch]:
+    """Columnar calibration sets: one template x n sampled configs per kind."""
+    r = np.random.default_rng(SEED)
+    sets: dict[str, BlockBatch] = {}
+
+    # MLP block: up / gate / down projections (3 dense layers)
+    cols = _dup_sample(
+        r,
+        {
+            "t": np.array([2048, 4096, 8192, 16384]),
+            "d": np.array([1024, 1536, 2048, 2560]),
+            "f": np.array([512, 1024, 1536, 4096]),
+        },
+        n_per_kind,
+        dup,
+    )
+    t, d, f = cols["t"], cols["d"], cols["f"]
+    sets["mlp"] = BlockBatch.from_template(
+        "mlp",
+        [
+            ("dense", ConfigBatch.from_columns({"tokens": t, "d_in": d, "d_out": f})),
+            ("dense", ConfigBatch.from_columns({"tokens": t, "d_in": d, "d_out": f})),
+            ("dense", ConfigBatch.from_columns({"tokens": t, "d_in": f, "d_out": d})),
+        ],
+        collective_bytes=t.astype(np.float64) * d * 2.0,
+    )
+
+    # Fused transformer layer: qkv -> attention -> proj -> up/gate/down, the
+    # canonical fused region on the TPU (one launch, overlapped compute/DMA).
+    cols = _dup_sample(
+        r,
+        {
+            "b": np.array([2, 4, 8]),
+            "s": np.array([512, 1024, 2048]),
+            "h": np.array([8, 16, 32]),
+            "f": np.array([2048, 4096, 8192]),
+        },
+        n_per_kind,
+        dup,
+    )
+    b, s, h, f = cols["b"], cols["s"], cols["h"], cols["f"]
+    d = h * 128
+    tok = b * s
+    kv = np.full_like(b, 4)
+    sets["layer"] = BlockBatch.from_template(
+        "layer",
+        [
+            ("dense", ConfigBatch.from_columns({"tokens": tok, "d_in": d, "d_out": 3 * d})),
+            ("attention_prefill", ConfigBatch.from_columns(
+                {"B": b, "S": s, "H": h, "Dh": np.full_like(b, 128), "kv_ratio": kv})),
+            ("dense", ConfigBatch.from_columns({"tokens": tok, "d_in": d, "d_out": d})),
+            ("dense", ConfigBatch.from_columns({"tokens": tok, "d_in": d, "d_out": f})),
+            ("dense", ConfigBatch.from_columns({"tokens": tok, "d_in": d, "d_out": f})),
+            ("dense", ConfigBatch.from_columns({"tokens": tok, "d_in": f, "d_out": d})),
+        ],
+        collective_bytes=tok.astype(np.float64) * d * 2.0,
+    )
+    return sets
+
+
+def _networks(train: dict[str, BlockBatch], n_networks: int, size: int) -> list[list]:
+    """Evaluation networks that partially overlap the calibration blocks."""
+    r = np.random.default_rng(SEED + 1)
+    pool = [b for batch in train.values() for b in batch.to_blocks()]
+    return [
+        [pool[int(r.integers(0, len(pool)))] for _ in range(size)]
+        for _ in range(n_networks)
+    ]
+
+
+# ------------------------------------------------- frozen scalar reference
+def _scalar_measure(platform, blocks) -> np.ndarray:
+    """Pre-refactor measurement: one measure_block call per block, no cache."""
+    return np.array(
+        [
+            platform.measure_block(list(b.layers), collective_bytes=b.collective_bytes)
+            for b in blocks
+        ],
+        dtype=np.float64,
+    )
+
+
+def _scalar_fit(platform, oracle, blocks):
+    """Pre-refactor fusing fit: scalar measure loop + batched layer_times."""
+    layer_times = oracle.layer_times(blocks)
+    f_targets, ops = [], []
+    for b, times in zip(blocks, layer_times):
+        t_meas = platform.measure_block(
+            list(b.layers), collective_bytes=b.collective_bytes
+        )
+        f_targets.append(sum(times) - t_meas)
+        ops.append(block_ops(b))
+    A = np.stack([np.asarray(ops), np.ones(len(ops))], axis=1)
+    coef, *_ = np.linalg.lstsq(A, np.asarray(f_targets), rcond=None)
+    return float(coef[0]), float(coef[1])
+
+
+def _scalar_evaluate(platform, oracle, networks):
+    """Pre-refactor evaluation: per-network, per-block measure loop."""
+    y_true, y_pred = [], []
+    for net in networks:
+        t = 0.0
+        for b in net:
+            t += platform.measure_block(
+                list(b.layers), collective_bytes=b.collective_bytes
+            ) * b.repeat
+        y_true.append(t)
+        y_pred.append(oracle.predict_network(net))
+    y_true, y_pred = np.asarray(y_true), np.asarray(y_pred)
+    return {"mape": mape(y_true, y_pred), "rmspe": rmspe(y_true, y_pred)}
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-per-kind", type=int, default=800,
+                    help="calibration blocks per block type (the paper's ~500)")
+    ap.add_argument("--n-networks", type=int, default=8)
+    ap.add_argument("--network-size", type=int, default=40)
+    ap.add_argument("--smoke", action="store_true", help="small sizes for CI")
+    args = ap.parse_args(argv)
+    n_per_kind = 150 if args.smoke else args.n_per_kind
+    n_networks = 4 if args.smoke else args.n_networks
+
+    # ---- estimators (shared by both paths; training excluded from timing)
+    spec = CampaignSpec(
+        platform="tpu_v5e",
+        layer_types=("dense", "attention_prefill"),
+        n_samples=150 if args.smoke else 400,
+        seed=SEED,
+        forest_kwargs={"n_estimators": 8, "max_depth": 14},
+        platform_kwargs={"knowledge": "white"},
+    )
+    campaign = Campaign(spec)
+    oracle = campaign.run()
+    platform = campaign.platform.inner  # raw platform for the scalar reference
+    templates = _calibration_templates(n_per_kind)
+    blocks_by_kind = {k: batch.to_blocks() for k, batch in templates.items()}
+    networks = _networks(templates, n_networks, args.network_size)
+    n_blocks = sum(len(b) for b in templates.values())
+
+    # ---- stage 1 (gated): block measurement, the calibration bottleneck.
+    # Best-of-N with a cold cache and freshly built batches every repeat (no
+    # fingerprint memo, no cache hits carried over): each repeat times a real
+    # first-measurement pass; repeats only filter allocator/scheduler noise.
+    # The two paths alternate within each repeat so a load/thermal dip hits
+    # both rather than skewing the ratio.
+    repeats = 5
+    scalar_measure_s = float("inf")
+    batched_measure_s = float("inf")
+    for rep in range(1 + repeats):  # repeat 0 is an untimed warmup
+        t0 = time.perf_counter()
+        y_scalar = {
+            k: _scalar_measure(platform, blocks) for k, blocks in blocks_by_kind.items()
+        }
+        dt = time.perf_counter() - t0
+        if rep:
+            scalar_measure_s = min(scalar_measure_s, dt)
+
+        cold = CachedPlatform(campaign.platform.inner)
+        fresh_templates = _calibration_templates(n_per_kind)
+        t0 = time.perf_counter()
+        y_batched = {
+            k: cold.measure_block_batch(batch) for k, batch in fresh_templates.items()
+        }
+        dt = time.perf_counter() - t0
+        if rep:
+            batched_measure_s = min(batched_measure_s, dt)
+    for k in templates:
+        assert np.array_equal(y_scalar[k], y_batched[k]), f"{k}: block times diverge"
+    measure_speedup = scalar_measure_s / batched_measure_s
+
+    # ---- stage 2: fusing calibration (Eq. 10/11, per kind)
+    t0 = time.perf_counter()
+    scalar_fusing = {
+        k: _scalar_fit(platform, oracle, blocks) for k, blocks in blocks_by_kind.items()
+    }
+    scalar_fit_s = time.perf_counter() - t0
+
+    fresh = Campaign(spec)
+    fresh.estimators = dict(campaign.estimators)
+    t0 = time.perf_counter()
+    batched_fusing = fresh.calibrate_fusing(templates)
+    batched_fit_s = time.perf_counter() - t0
+    for kind, (w, c) in scalar_fusing.items():
+        got = batched_fusing[kind]
+        assert (got.w, got.c) == (w, c), f"fusing model for {kind!r} diverges"
+    fit_speedup = scalar_fit_s / batched_fit_s
+
+    # ---- stage 3: whole-network evaluation (Eq. 12 ground truth + estimate)
+    eval_oracle = PerfOracle(
+        estimators=dict(campaign.estimators), fusing=dict(batched_fusing)
+    )
+    t0 = time.perf_counter()
+    scalar_metrics = _scalar_evaluate(platform, eval_oracle, networks)
+    scalar_eval_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    batched_metrics = fresh.evaluate_networks(eval_oracle, networks)
+    batched_eval_s = time.perf_counter() - t0
+    assert batched_metrics == scalar_metrics, "evaluation metrics diverge"
+    eval_speedup = scalar_eval_s / batched_eval_s
+
+    # ---- 2-worker block-calibration mini-campaign: pool + journal resume
+    with tempfile.TemporaryDirectory() as tmp:
+        journal = os.path.join(tmp, "measurements.jsonl")
+        mini = {"mlp": templates["mlp"].take(np.arange(min(64, n_per_kind)))}
+        pool_campaign = Campaign(spec)
+        pool_campaign.estimators = dict(campaign.estimators)
+        pool_fusing = pool_campaign.calibrate_fusing(
+            mini, runtime=RuntimeSpec(workers=2, chunk_size=16, journal_path=journal)
+        )["mlp"]
+        resumed = Campaign(spec)
+        resumed.estimators = dict(campaign.estimators)
+        resumed_fusing = resumed.calibrate_fusing(
+            mini, runtime=RuntimeSpec(workers=1, journal_path=journal)
+        )["mlp"]
+        assert resumed.cache.block_misses == 0, "resume re-measured journaled blocks"
+        assert resumed.cache.block_replayed == pool_campaign.cache.block_misses
+        assert (resumed_fusing.w, resumed_fusing.c) == (pool_fusing.w, pool_fusing.c)
+        mini_stats = {
+            "pool": pool_campaign.last_run_stats,
+            "resumed": resumed.last_run_stats,
+        }
+
+    report = {
+        "spec": {
+            "n_per_kind": n_per_kind,
+            "n_blocks": n_blocks,
+            "n_networks": n_networks,
+            "network_size": args.network_size,
+        },
+        "measure": {
+            "scalar_s": scalar_measure_s,
+            "batched_s": batched_measure_s,
+            "speedup": measure_speedup,
+        },
+        "calibration": {
+            "scalar_s": scalar_fit_s,
+            "batched_s": batched_fit_s,
+            "speedup": fit_speedup,
+            "fusing": {k: {"w": m.w, "c": m.c} for k, m in batched_fusing.items()},
+        },
+        "evaluation": {
+            "scalar_s": scalar_eval_s,
+            "batched_s": batched_eval_s,
+            "speedup": eval_speedup,
+            "metrics": batched_metrics,
+        },
+        "mini_campaign": mini_stats,
+        "cache": campaign.cache.stats(),
+        "parity": True,
+        "resume_zero_remeasure": True,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=1)
+
+    emit("blocks.measure.scalar", scalar_measure_s / n_blocks * 1e6,
+         f"blocks_per_s={n_blocks / scalar_measure_s:.0f}")
+    emit("blocks.measure.batched", batched_measure_s / n_blocks * 1e6,
+         f"blocks_per_s={n_blocks / batched_measure_s:.0f}")
+    emit("blocks.measure.speedup", 0.0, f"batched_vs_scalar={measure_speedup:.1f}x")
+    emit("blocks.calibration.speedup", 0.0, f"batched_vs_scalar={fit_speedup:.1f}x")
+    emit("blocks.evaluation.speedup", 0.0, f"batched_vs_scalar={eval_speedup:.1f}x")
+
+    # Parity/resume asserts above are the hard gate; the throughput floor
+    # guards the measurement path against regressing to a Python loop.
+    min_speedup = float(os.environ.get("REPRO_BLOCKS_MIN_SPEEDUP", "3.0"))
+    if measure_speedup < min_speedup:
+        raise RuntimeError(
+            f"block-path regression: measurement speedup {measure_speedup:.2f}x "
+            f"< {min_speedup:g}x"
+        )
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ import traceback
 
 from benchmarks import (
     advisor_bench,
+    bench_blocks,
     bench_engine,
     bench_forest,
     fig2_sweeps,
@@ -34,8 +35,9 @@ SUITES = {
     "roofline": roofline_report.main,
     "advisor": advisor_bench.main,
     "engine": bench_engine.main,
-    # argv=[] so the harness's own CLI names don't reach bench_forest's parser
+    # argv=[] so the harness's own CLI names don't reach the benches' parsers
     "forest": lambda: bench_forest.main([]),
+    "blocks": lambda: bench_blocks.main([]),
 }
 
 

@@ -17,7 +17,7 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
-from repro.core.batch import ConfigBatch
+from repro.core.batch import BlockBatch, ConfigBatch
 from repro.core.prs import Config, ParamSpace
 
 
@@ -123,6 +123,33 @@ class Platform(abc.ABC):
         in-flight collective bytes).
         """
         return float(sum(self.measure(lt, cfg) for lt, cfg in layers))
+
+    def measure_block_batch(self, batch: BlockBatch) -> np.ndarray:
+        """Execution times (seconds) of a whole batch of building blocks.
+
+        The block-path extension point (the analogue of ``measure_batch``):
+        the built-in platforms override it with columnar timing models.  The
+        default is a scalar ``measure_block`` loop, so third-party platforms
+        that override only ``measure_block`` (with whatever fusion semantics
+        they implement) keep working on the batched whole-network pipeline.
+        """
+        return np.array(
+            [
+                self.measure_block(list(b.layers), collective_bytes=b.collective_bytes)
+                for b in batch.to_blocks()
+            ],
+            dtype=np.float64,
+        )
+
+    def _summed_block_batch(self, batch: BlockBatch) -> np.ndarray:
+        """Columnar sum-of-layers block model (the ``measure_block`` default).
+
+        Each layer group rides the platform's vectorized ``measure_batch``
+        once; the per-block left-fold sum matches the scalar
+        ``sum(measure(...))`` loop bit for bit (see
+        :meth:`BlockBatch.sum_by_block`).
+        """
+        return batch.sum_by_block(batch.scatter_groups(self.measure_batch))
 
     # ---- bookkeeping ---------------------------------------------------------------
     def timed_measure_many(

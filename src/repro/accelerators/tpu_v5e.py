@@ -34,8 +34,8 @@ import math
 import numpy as np
 
 from repro.accelerators.base import Platform
-from repro.api.registry import register_platform
-from repro.core.batch import ConfigBatch
+from repro.registry import register_platform
+from repro.core.batch import BlockBatch, ConfigBatch
 from repro.core.prs import Config, ParamSpace
 
 
@@ -328,6 +328,37 @@ class TPUv5eSim(Platform):
         ici_s = collective_bytes / (self.chip.ici_bandwidth * self.chip.ici_links)
         t = max(flop_s, mem_s, ici_s) + self.chip.launch_overhead_s
         return t * self._noise_factor("block", {"n": len(layers)})
+
+    def measure_block_batch(self, batch: BlockBatch) -> np.ndarray:
+        """Columnar fused-block model, bitwise-identical to ``measure_block``.
+
+        Per-layer (flop, hbm) terms come from one ``_terms_batch`` call per
+        layer group; ``np.bincount`` then accumulates each block's terms in
+        layer-table order — the same left-fold the scalar ``+=`` loop runs —
+        before the Eq.-9 max against the in-flight collective term.
+        """
+        # One _terms_batch per group computes both columns, so this keeps its
+        # own scatter loop instead of two scatter_groups passes.
+        flop = np.zeros(batch.n_layers, dtype=np.float64)
+        mem = np.zeros(batch.n_layers, dtype=np.float64)
+        for g, (lt, cfgs) in enumerate(zip(batch.group_types, batch.group_configs)):
+            mask = batch.group_of == g
+            f, m = self._terms_batch(lt, cfgs)
+            flop[mask] = f
+            mem[mask] = m
+        flop_s = batch.sum_by_block(flop)
+        mem_s = batch.sum_by_block(mem)
+        ici_s = batch.collective_bytes / (self.chip.ici_bandwidth * self.chip.ici_links)
+        t = np.maximum(np.maximum(flop_s, mem_s), ici_s) + self.chip.launch_overhead_s
+        if self.noise > 0:
+            # Per-block hash seeding is inherently scalar (same as measure_batch).
+            t = t * np.array(
+                [
+                    self._noise_factor("block", {"n": int(c)})
+                    for c in batch.layer_counts().tolist()
+                ]
+            )
+        return np.asarray(t, dtype=np.float64)
 
 
 register_platform("tpu_v5e", TPUv5eSim)

@@ -17,8 +17,8 @@ import math
 import numpy as np
 
 from repro.accelerators.base import Platform
-from repro.api.registry import register_platform
-from repro.core.batch import ConfigBatch
+from repro.registry import register_platform
+from repro.core.batch import BlockBatch, ConfigBatch
 from repro.core.prs import Config, ParamSpace
 
 
@@ -89,6 +89,12 @@ class UltraTrailSim(Platform):
         post_cycles = k_tiles * w_out
         cycles = mac_cycles + post_cycles + self.OVERHEAD_CYCLES
         return cycles / self.CLOCK_HZ
+
+    def measure_block_batch(self, batch: BlockBatch) -> np.ndarray:
+        """Columnar block path: UltraTrail has no cross-layer fusion, so a
+        block is the per-layer sum — computed through the vectorized cycle
+        model, bitwise-identical to the scalar ``measure_block`` loop."""
+        return self._summed_block_batch(batch)
 
 
 register_platform("ultratrail", UltraTrailSim)

@@ -28,8 +28,8 @@ from functools import lru_cache
 import numpy as np
 
 from repro.accelerators.base import Platform
-from repro.api.registry import register_platform
-from repro.core.batch import ConfigBatch
+from repro.registry import register_platform
+from repro.core.batch import BlockBatch, ConfigBatch
 from repro.core.prs import Config, ParamSpace
 
 
@@ -133,6 +133,16 @@ class XLACPUPlatform(Platform):
             dtype=np.float64,
         )
         return y[inverse]
+
+    def measure_block_batch(self, batch: BlockBatch) -> np.ndarray:
+        """Block path: sum of per-layer wall-clock times, layers deduplicated.
+
+        Each layer group rides ``measure_batch`` (which times unique rows
+        once, in first-occurrence order), so a batch of blocks sharing layer
+        shapes pays one warm-up/measurement per unique shape — same values as
+        the scalar ``measure_block`` loop, which hits ``self._cache``.
+        """
+        return self._summed_block_batch(batch)
 
 
 register_platform("xla_cpu", XLACPUPlatform)

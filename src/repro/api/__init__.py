@@ -19,10 +19,11 @@ from repro.api.campaign import Campaign, CampaignSpec, train_layer_estimator
 from repro.api.hub import EstimatorHub
 from repro.api.oracle import PerfOracle
 from repro.api.registry import get_platform, list_platforms, register_platform
-from repro.core.batch import ConfigBatch
+from repro.core.batch import BlockBatch, ConfigBatch
 from repro.runtime import MeasurementRuntime, RunStats, RuntimeSpec
 
 __all__ = [
+    "BlockBatch",
     "CachedPlatform",
     "Campaign",
     "CampaignSpec",

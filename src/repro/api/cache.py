@@ -21,6 +21,7 @@ platform's vectorized timing model.
 
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import json
 import os
@@ -30,7 +31,7 @@ from typing import Mapping, Sequence
 import numpy as np
 
 from repro.accelerators.base import Platform
-from repro.core.batch import ConfigBatch
+from repro.core.batch import BlockBatch, ConfigBatch
 from repro.core.prs import Config, ParamSpace
 
 
@@ -57,12 +58,59 @@ def batch_keys(layer_type: str, batch: ConfigBatch) -> list[tuple]:
     return [(layer_type, tuple(zip(sorted_params, row))) for row in rows]
 
 
+def block_key(
+    layers: Sequence[tuple[str, Config]], collective_bytes: float = 0.0
+) -> tuple:
+    """Canonical hashable key for one building block's measurement.
+
+    Matches :meth:`repro.core.batch.BlockBatch.fingerprints` exactly:
+    ``("block", structure, values_bytes, coll)`` — the layer sequence (order
+    preserved) as a structure string plus the concatenated sorted-by-param
+    int64 values.  ``kind``/``repeat`` are excluded — they affect how a
+    block's time is combined, not what a platform measures.  Raises
+    ``ValueError`` for non-integer config values instead of silently
+    truncating them into a wrong key.
+    """
+    structs = []
+    values: list[int] = []
+    for lt, cfg in layers:
+        params = tuple(sorted(cfg))
+        structs.append(BlockBatch._layer_structure(lt, params))
+        for p in params:
+            v = cfg[p]
+            iv = int(v)
+            if iv != v:
+                raise ValueError(f"block layer param {p!r}={v!r} is not an integer")
+            values.append(iv)
+    return (
+        "block",
+        "\x1e".join(structs),
+        np.asarray(values, dtype=np.int64).tobytes(),
+        float(collective_bytes),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class _MeasuredBlock:
+    """Minimal duck block for wrapping a scalar measure_block call into a
+    one-row :class:`BlockBatch` (avoids importing the heavier core.blocks)."""
+
+    layers: tuple
+    collective_bytes: float = 0.0
+    kind: str = ""
+    repeat: float = 1.0
+
+
 class MeasurementCache:
     """Memoizes single-layer measurements and discovered step widths."""
 
     def __init__(self) -> None:
         #: (platform, layer_type, sorted cfg items) -> seconds
         self._times: dict[tuple, float] = {}
+        #: platform -> {block fingerprint (see ``block_key``) -> seconds};
+        #: nested so a batch lookup probes one inner dict without building a
+        #: (platform,) + key tuple per block
+        self._block_times: dict[str, dict[tuple, float]] = {}
         #: (platform, layer_type, threshold, n_points) -> (widths, n_meas)
         self._widths: dict[tuple, tuple[dict[str, int], int]] = {}
         #: (platform, layer_type, widths, snap, batch fingerprint) -> features
@@ -71,9 +119,16 @@ class MeasurementCache:
         self.misses = 0
         #: measurements preloaded from a journal replay (not hits, not misses)
         self.replayed = 0
+        #: block-level accounting, kept apart from the per-config counters so
+        #: Table-1 per-point costs and campaign stats keep their meaning
+        self.block_hits = 0
+        self.block_misses = 0
+        self.block_replayed = 0
         self.feature_hits = 0
         #: wall-clock seconds spent inside actual (miss) measurements
         self.measure_seconds = 0.0
+        #: wall-clock seconds spent inside actual block (miss) measurements
+        self.block_measure_seconds = 0.0
 
     # ------------------------------------------------------------- measurements
     def lookup(self, platform: str, layer_type: str, cfg: Config) -> float | None:
@@ -161,9 +216,110 @@ class MeasurementCache:
         self.replayed += new
         return new
 
+    # ------------------------------------------------------------- block times
+    def _blocks_for(self, platform: str) -> dict[tuple, float]:
+        table = self._block_times.get(platform)
+        if table is None:
+            table = self._block_times[platform] = {}
+        return table
+
+    def lookup_block(
+        self, platform: str, layers: Sequence[tuple[str, Config]], collective_bytes: float
+    ) -> float | None:
+        t = self._blocks_for(platform).get(block_key(layers, collective_bytes))
+        if t is not None:
+            self.block_hits += 1
+        return t
+
+    def store_block(
+        self,
+        platform: str,
+        layers: Sequence[tuple[str, Config]],
+        collective_bytes: float,
+        seconds: float,
+    ) -> None:
+        self._blocks_for(platform)[block_key(layers, collective_bytes)] = seconds
+        self.block_misses += 1
+
+    def lookup_blocks(
+        self, platform: str, batch: BlockBatch
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Partition a block batch into cache hits and misses in one pass.
+
+        Same contract as :meth:`lookup_many`, over block fingerprints:
+        ``(times, miss_rows, miss_map)`` where ``miss_rows`` holds the first
+        occurrence of each distinct missing block and ``miss_map`` scatters
+        measured values back to in-batch duplicates.  Duplicate misses count
+        as hits, matching a scalar measure/store replay.
+        """
+        keys = batch.fingerprints()
+        table = self._blocks_for(platform)
+        n = len(keys)
+        times = np.full(n, np.nan, dtype=np.float64)
+        miss_map = np.full(n, -1, dtype=np.int64)
+        miss_rows: list[int] = []
+        first_pos: dict[tuple, int] = {}
+        for i, k in enumerate(keys):
+            t = table.get(k)
+            if t is not None:
+                times[i] = t
+            else:
+                pos = first_pos.get(k)
+                if pos is None:
+                    pos = len(miss_rows)
+                    first_pos[k] = pos
+                    miss_rows.append(i)
+                miss_map[i] = pos
+        self.block_hits += n - len(miss_rows)
+        return times, np.array(miss_rows, dtype=np.int64), miss_map
+
+    def store_blocks(
+        self,
+        platform: str,
+        batch: BlockBatch,
+        seconds: np.ndarray,
+        keys: Sequence[tuple] | None = None,
+    ) -> None:
+        """Store one measured block sub-batch.
+
+        ``keys`` short-circuits the fingerprint pass when the caller already
+        holds them (``CachedPlatform`` reuses the lookup pass's keys for the
+        miss rows); ``batch.fingerprints()`` memoizes anyway, so this is an
+        allocation saving, not a correctness lever.
+        """
+        seconds = np.asarray(seconds, dtype=np.float64)
+        if keys is None:
+            keys = batch.fingerprints()
+        table = self._blocks_for(platform)
+        for k, t in zip(keys, seconds.tolist()):
+            table[k] = t
+        self.block_misses += len(batch)
+
+    def preload_blocks(
+        self, platform: str, batch: BlockBatch, seconds: np.ndarray
+    ) -> int:
+        """Journal-replay insert for block measurements (see :meth:`preload`).
+
+        Last-writer-wins on duplicate keys, does not disturb hit/miss
+        accounting, returns the number of keys that were new.
+        """
+        seconds = np.asarray(seconds, dtype=np.float64)
+        table = self._blocks_for(platform)
+        new = 0
+        for k, t in zip(batch.fingerprints(), seconds.tolist()):
+            if k not in table:
+                new += 1
+            table[k] = t
+        self.block_replayed += new
+        return new
+
     @property
     def n_unique(self) -> int:
         return len(self._times)
+
+    @property
+    def n_unique_blocks(self) -> int:
+        return sum(len(t) for t in self._block_times.values())
 
     @property
     def mean_measure_seconds(self) -> float:
@@ -238,10 +394,16 @@ class MeasurementCache:
 
     # ------------------------------------------------------------- persistence
     def save(self, path: str) -> None:
-        """Persist the cache as JSON (times + widths) for cross-run reuse."""
+        """Persist the cache as JSON (times + widths + blocks) for cross-run reuse."""
         payload = {
             "times": [[list(k[:2]) + [list(k[2])], v] for k, v in self._times.items()],
             "widths": [[list(k), [w, n]] for k, (w, n) in self._widths.items()],
+            # block entry: [platform, structure_str, values, coll, seconds]
+            "blocks": [
+                [plat, k[1], np.frombuffer(k[2], dtype=np.int64).tolist(), k[3], v]
+                for plat, table in self._block_times.items()
+                for k, v in table.items()
+            ],
         }
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         tmp = path + ".tmp"
@@ -261,6 +423,14 @@ class MeasurementCache:
                 {p: int(x) for p, x in w.items()},
                 int(n),
             )
+        for plat, structure, vals, coll, v in payload.get("blocks", ()):
+            key = (
+                "block",
+                structure,
+                np.asarray(vals, dtype=np.int64).tobytes(),
+                float(coll),
+            )
+            cache._blocks_for(plat)[key] = float(v)
         return cache
 
     def stats(self) -> dict[str, float]:
@@ -269,8 +439,13 @@ class MeasurementCache:
             "hits": self.hits,
             "misses": self.misses,
             "replayed": self.replayed,
+            "unique_blocks": self.n_unique_blocks,
+            "block_hits": self.block_hits,
+            "block_misses": self.block_misses,
+            "block_replayed": self.block_replayed,
             "feature_hits": self.feature_hits,
             "measure_seconds": self.measure_seconds,
+            "block_measure_seconds": self.block_measure_seconds,
         }
 
 
@@ -373,10 +548,73 @@ class CachedPlatform(Platform):
             times[missing] = y[miss_map[missing]]
         return times
 
-    def measure_block(self, layers: Sequence[tuple[str, Config]], **kwargs) -> float:
-        # Block execution is fused/overlapped — semantically distinct from the
-        # sum of single-layer times, so it bypasses the single-layer cache.
-        return self.inner.measure_block(layers, **kwargs)
+    def measure_block(
+        self, layers: Sequence[tuple[str, Config]], collective_bytes: float = 0.0, **kwargs
+    ) -> float:
+        """Cached block measurement (own key space: fused/overlapped execution
+        is semantically distinct from the sum of single-layer times, so block
+        times never mix with the single-layer cache).
+
+        Unknown platform-specific kwargs cannot be fingerprinted and bypass
+        the cache, as do non-integer layer configs.
+        """
+        if kwargs:
+            return self.inner.measure_block(
+                layers, collective_bytes=collective_bytes, **kwargs
+            )
+        key = self.inner.cache_key()
+        try:
+            t = self.cache.lookup_block(key, layers, collective_bytes)
+        except (ValueError, TypeError):
+            # Unfingerprintable config (fractional value -> ValueError,
+            # non-numeric like None/tuples -> TypeError from int()): bypass
+            # the cache like the pre-cache path did.
+            return self.inner.measure_block(layers, collective_bytes=collective_bytes)
+        if t is not None:
+            if self.runtime is not None:
+                self.runtime.stats.cached += 1
+            return t
+        t0 = time.perf_counter()
+        if self.runtime is not None:
+            batch = BlockBatch.from_blocks(
+                [_MeasuredBlock(layers=tuple(layers), collective_bytes=collective_bytes)]
+            )
+            t = float(self.runtime.measure_blocks(batch)[0])
+        else:
+            t = self.inner.measure_block(layers, collective_bytes=collective_bytes)
+        self.cache.block_measure_seconds += time.perf_counter() - t0
+        self.cache.store_block(key, layers, collective_bytes, t)
+        return t
+
+    def measure_block_batch(self, batch: BlockBatch) -> np.ndarray:
+        """Cache-partitioned block-batch measurement.
+
+        Mirror of :meth:`measure_batch` over block fingerprints: one
+        ``lookup_blocks`` pass splits the batch, only distinct misses reach
+        the platform's columnar block model (or the measurement runtime's
+        scheduler when attached), and duplicates/hits fill from the cache —
+        every unique block is measured at most once across calibration,
+        evaluation and autotuning.
+        """
+        key = self.inner.cache_key()
+        times, miss_rows, miss_map = self.cache.lookup_blocks(key, batch)
+        if self.runtime is not None:
+            self.runtime.stats.cached += len(batch) - int(miss_rows.size)
+        if miss_rows.size:
+            sub = batch.take(miss_rows)  # carries the parent's fingerprints
+            t0 = time.perf_counter()
+            if self.runtime is not None:
+                y = self.runtime.measure_blocks(sub)
+            else:
+                y = self.inner.measure_block_batch(sub)
+            self.cache.block_measure_seconds += time.perf_counter() - t0
+            fps = batch.fingerprints()
+            self.cache.store_blocks(
+                key, sub, y, keys=[fps[i] for i in miss_rows.tolist()]
+            )
+            missing = miss_map >= 0
+            times[missing] = y[miss_map[missing]]
+        return times
 
     def timed_measure_many(
         self, layer_type: str, configs: Sequence[Config]

@@ -20,6 +20,7 @@ Trained estimators are persisted through an
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Mapping, Sequence
@@ -33,6 +34,7 @@ from repro.api.oracle import PerfOracle
 from repro.api.registry import get_platform
 from repro.core import prs, sweeps
 from repro.core.batch import ConfigBatch
+from repro.core.blocks import Block, FusingModel, fit_fusing_model
 from repro.core.estimator import LayerEstimator
 from repro.core.forest import RandomForestRegressor, mape, rmspe
 
@@ -217,6 +219,38 @@ class Campaign:
             return MeasurementRuntime(runtime, self.platform.inner), True
         return runtime, False
 
+    @contextlib.contextmanager
+    def runtime_session(self, runtime):
+        """Attach a measurement runtime to the cached platform for one stage.
+
+        Every cache miss inside the ``with`` block — config batches *and*
+        block batches — flows through the runtime's sharded scheduler (worker
+        pool, retries, crash-safe journal).  The journal is replayed into the
+        measurement cache on entry, so an interrupted stage resumes with zero
+        duplicate measurements; ``last_run_stats`` is snapshotted on exit.
+        Accepts a :class:`repro.runtime.RuntimeSpec` (runtime owned and torn
+        down here), a ready :class:`~repro.runtime.MeasurementRuntime`, or
+        ``None`` (no-op).
+        """
+        rt, owned = self._resolve_runtime(runtime)
+        # Always reset: a runtime-less stage after a runtime-backed one must
+        # not stamp the previous stage's stats onto the new result.
+        self.last_run_stats = None
+        if rt is None:
+            yield None
+            return
+        self.platform.runtime = rt
+        try:
+            # Inside the try: an unreadable/corrupt-beyond-salvage journal
+            # must still tear down the freshly spawned worker pool.
+            rt.replay_into(self.cache)
+            yield rt
+        finally:
+            self.platform.runtime = None
+            self.last_run_stats = rt.stats.snapshot()
+            if owned:
+                rt.close()
+
     def run(self, runtime=None, **oracle_kwargs) -> PerfOracle:
         """Train every layer type in the spec and return the oracle.
 
@@ -228,32 +262,52 @@ class Campaign:
         are bitwise-identical to the serial path for any worker count.
         """
         layer_types = self.spec.layer_types or self.platform.layer_types()
-        rt, owned = self._resolve_runtime(runtime)
-        # Always reset: a runtime-less run after a run(runtime=...) must not
-        # stamp the previous run's stats onto the new oracle.
-        self.last_run_stats = None
-        if rt is not None:
-            self.platform.runtime = rt
-        try:
-            if rt is not None:
-                # Inside the try: an unreadable/corrupt-beyond-salvage journal
-                # must still tear down the freshly spawned worker pool.
-                rt.replay_into(self.cache)
+        with self.runtime_session(runtime):
             for lt in layer_types:
                 if lt not in self.estimators:
                     self.train(lt)
-        finally:
-            if rt is not None:
-                self.platform.runtime = None
-                self.last_run_stats = rt.stats.snapshot()
-                if owned:
-                    rt.close()
         oracle_kwargs.setdefault("run_stats", self.last_run_stats)
         return PerfOracle(
             estimators=dict(self.estimators),
             platform_name=self.platform.name,
             **oracle_kwargs,
         )
+
+    # ------------------------------------------------------- whole-network path
+    def calibrate_fusing(
+        self,
+        blocks_by_kind: Mapping[str, Sequence[Block]],
+        runtime=None,
+    ) -> dict[str, FusingModel]:
+        """Fit Eq. 10/11 fusing models per block type, on the columnar path.
+
+        Each kind's ~500 calibration blocks are measured as one
+        :class:`~repro.core.batch.BlockBatch` through the block cache (and
+        the runtime's scheduler/journal when given), then fitted with one
+        lstsq — the whole-network analogue of ``run()``'s per-layer training.
+        Requires the relevant layer estimators to be trained already.
+        """
+        with self.runtime_session(runtime):
+            return {
+                kind: fit_fusing_model(self.platform, self.estimators, blocks)
+                for kind, blocks in blocks_by_kind.items()
+            }
+
+    def evaluate_networks(
+        self,
+        oracle: PerfOracle,
+        networks: Sequence[Sequence[Block]],
+        runtime=None,
+    ) -> dict[str, float]:
+        """Whole-network MAPE/RMSPE against block-path ground truth.
+
+        Ground truth is measured through the campaign's block cache (one
+        batch over all networks; repeated blocks are measured once, also
+        across a preceding ``calibrate_fusing``), optionally sharded/
+        journaled through a runtime.
+        """
+        with self.runtime_session(runtime):
+            return oracle.evaluate_networks(self.platform, networks)
 
     # ------------------------------------------------------------- size scans
     def sampling_curve(

@@ -24,6 +24,7 @@ from repro.core.batch import ConfigBatch
 from repro.core.blocks import Block, FusingModel
 from repro.core.estimator import LayerEstimator
 from repro.core.forest import mape, rmspe
+from repro.core.network import simulate_networks
 from repro.core.prs import Config
 
 
@@ -82,7 +83,10 @@ class PerfOracle:
         need raw per-layer estimates grouped by block (e.g.
         :func:`repro.core.blocks.fit_fusing_model`) use this instead of a
         ``predict_one`` loop — a 40-layer network with 3 layer types costs 3
-        forest passes, not 120 single-row calls.
+        forest passes, not 120 single-row calls.  Each layer type's configs
+        are columnarised into one :class:`ConfigBatch` (snap, features and
+        forest traversal all run columnar); ragged or non-integer key sets
+        stay on the dict-list path, which predicts identically.
         """
         by_type: dict[str, list[Config]] = {}
         slots: list[list[tuple[str, int]]] = []
@@ -93,8 +97,24 @@ class PerfOracle:
                 block_slots.append((lt, len(batch)))
                 batch.append(cfg)
             slots.append(block_slots)
-        preds = {lt: self.predict(lt, cfgs) for lt, cfgs in by_type.items()}
+        preds = {}
+        for lt, cfgs in by_type.items():
+            try:
+                configs: Sequence[Config] | ConfigBatch = ConfigBatch.from_dicts(cfgs)
+            except ValueError:
+                configs = cfgs  # heterogeneous keys / non-integer values
+            preds[lt] = self.predict(lt, configs)
         return [[float(preds[lt][i]) for lt, i in block_slots] for block_slots in slots]
+
+    def layer_time_sums(self, batch) -> np.ndarray:
+        """Per-block summed layer estimates for a whole :class:`BlockBatch`.
+
+        The columnar-native sibling of :meth:`layer_times` for consumers that
+        only need each block's layer-time sum (Eq. 10's first term): one
+        batched ``predict`` per layer group, then a ``bincount`` left fold
+        per block — bitwise-identical to summing :meth:`layer_times` rows.
+        """
+        return batch.sum_by_block(batch.scatter_groups(self.predict))
 
     def _combine(self, block: Block, times: Sequence[float]) -> float:
         if block.kind in self.overlap_kinds:
@@ -110,10 +130,53 @@ class PerfOracle:
 
     def predict_network(self, blocks: Sequence[Block]) -> float:
         """Eq. 12 with one batched forest pass per layer type."""
-        all_times = self.layer_times(blocks)
-        return float(
-            sum(self._combine(b, t) * b.repeat for b, t in zip(blocks, all_times))
-        )
+        return float(self.predict_networks([blocks])[0])
+
+    def predict_networks(self, networks: Sequence[Sequence[Block]]) -> np.ndarray:
+        """Eq. 12 over many networks, one forest pass per layer type *total*.
+
+        All networks' blocks share a single :meth:`layer_times` call, so
+        estimating 24 candidate meshes with 3 layer types costs 3 forest
+        traversal batches, not 72 — the per-network combination (Eq. 9-12) is
+        plain scalar arithmetic.  Forest predictions are row-independent, so
+        every network's estimate is bitwise identical to a standalone
+        ``predict_network`` call.
+        """
+        networks = [list(net) for net in networks]
+        flat = [b for net in networks for b in net]
+        all_times = self.layer_times(flat)
+        out = np.empty(len(networks), dtype=np.float64)
+        i = 0
+        for j, net in enumerate(networks):
+            t = 0.0
+            for b in net:
+                t += self._combine(b, all_times[i]) * b.repeat
+                i += 1
+            out[j] = t
+        return out
+
+    def evaluate_networks(
+        self, platform: Platform, networks: Sequence[Sequence[Block]]
+    ) -> dict[str, float]:
+        """MAPE/RMSPE of whole-network estimates against measured ground truth.
+
+        Ground truth rides the columnar block path (all networks measured as
+        one block batch, see :func:`repro.core.network.simulate_networks`);
+        predictions use :meth:`predict_networks`.  Raises ``TypeError`` when
+        the platform cannot measure blocks: silently accumulating ``0.0``
+        ground truth would return nan/inf error metrics that read like a
+        result instead of a broken setup.
+        """
+        if not hasattr(platform, "measure_block"):
+            raise TypeError(
+                f"platform {getattr(platform, 'name', platform)!r} does not "
+                "implement measure_block(); cannot measure whole-network "
+                "ground truth for evaluation"
+            )
+        networks = [list(net) for net in networks]
+        y_true = np.asarray(simulate_networks(platform, networks), dtype=np.float64)
+        y_pred = self.predict_networks(networks)
+        return {"mape": mape(y_true, y_pred), "rmspe": rmspe(y_true, y_pred)}
 
     # ------------------------------------------------------------ persistence
     def save(self, hub, platform_name: str | None = None) -> None:

@@ -1,61 +1,22 @@
-"""Platform registry: accelerator platforms keyed by name.
+"""Public re-export of the platform registry.
 
-Every accelerator module registers its ``Platform`` subclass at import time,
-so campaign specs can refer to platforms declaratively (``platform="vta"``)
-instead of importing concrete classes.  ``get_platform`` accepts constructor
-kwargs, e.g. ``get_platform("tpu_v5e", knowledge="gray", noise=0.002)``.
-
-This module deliberately imports nothing heavy; ``repro.accelerators`` is
-imported lazily on first lookup so registration has happened by then.
+The implementation lives in :mod:`repro.registry` (outside the api package)
+so platform modules can register themselves without importing the whole
+``repro.api`` surface — see that module's docstring for the import-cycle
+rationale.  This shim keeps the documented ``repro.api.registry`` spelling
+(and the ``repro.api`` exports) working; both names share one registry.
 """
 
-from __future__ import annotations
+from repro.registry import (  # noqa: F401
+    get_platform,
+    list_platforms,
+    register_platform,
+    try_get_factory,
+)
 
-from typing import Callable
-
-from repro.accelerators.base import Platform
-
-_REGISTRY: dict[str, Callable[..., Platform]] = {}
-_builtins_loaded = False
-
-
-def register_platform(name: str, factory: Callable[..., Platform]) -> None:
-    """Register a platform factory (usually the class itself) under ``name``."""
-    _REGISTRY[name] = factory
-
-
-def _ensure_builtins() -> None:
-    # A flag, not an emptiness check: user code may register custom platforms
-    # before the first lookup, which must not mask the built-in four.
-    global _builtins_loaded
-    if not _builtins_loaded:
-        _builtins_loaded = True
-        import repro.accelerators  # noqa: F401  (registers the built-in four)
-
-
-def get_platform(name: str, **kwargs) -> Platform:
-    """Instantiate a registered platform by name."""
-    _ensure_builtins()
-    try:
-        factory = _REGISTRY[name]
-    except KeyError:
-        raise KeyError(
-            f"unknown platform {name!r}; registered: {sorted(_REGISTRY)}"
-        ) from None
-    return factory(**kwargs)
-
-
-def try_get_factory(name: str) -> Callable[..., Platform] | None:
-    """Registered factory or None — without importing the built-in platforms.
-
-    Runtime pool workers use this after importing their spawn spec's module:
-    the spec module has already registered the one platform the worker needs,
-    so e.g. a synthetic XLA-CPU worker never pays for the full accelerator
-    (and jax) imports.
-    """
-    return _REGISTRY.get(name)
-
-
-def list_platforms() -> tuple[str, ...]:
-    _ensure_builtins()
-    return tuple(sorted(_REGISTRY))
+__all__ = [
+    "get_platform",
+    "list_platforms",
+    "register_platform",
+    "try_get_factory",
+]

@@ -51,6 +51,23 @@ def default_candidates(chips: int = 256) -> list[Candidate]:
     return out
 
 
+def _microbatch_infeasible(shape: InputShape, cand: Candidate) -> bool:
+    return bool(
+        shape.global_batch % (cand.dp * cand.microbatches)
+        and shape.global_batch >= cand.dp
+    )
+
+
+def candidate_blocks(
+    cfg: ModelConfig, shape: InputShape, cand: Candidate
+) -> list[Block]:
+    """Per-device building blocks of one candidate's microbatch step."""
+    micro_shape = dataclasses.replace(
+        shape, global_batch=max(1, shape.global_batch // cand.microbatches)
+    )
+    return decompose(cfg, micro_shape, cand.dp, cand.tp)
+
+
 def estimate_candidate(
     estimator: NetworkPredictor,
     cfg: ModelConfig,
@@ -58,12 +75,9 @@ def estimate_candidate(
     cand: Candidate,
 ) -> float:
     """Estimated step time under a candidate distribution config."""
-    if shape.global_batch % (cand.dp * cand.microbatches) and shape.global_batch >= cand.dp:
+    if _microbatch_infeasible(shape, cand):
         return float("inf")
-    micro_shape = dataclasses.replace(
-        shape, global_batch=max(1, shape.global_batch // cand.microbatches)
-    )
-    blocks = decompose(cfg, micro_shape, cand.dp, cand.tp)
+    blocks = candidate_blocks(cfg, shape, cand)
     return estimator.predict_network(blocks) * cand.microbatches
 
 
@@ -74,13 +88,36 @@ def autotune(
     candidates: Sequence[Candidate] | None = None,
     chips: int = 256,
 ) -> list[tuple[Candidate, float]]:
+    """Rank candidate meshes by estimated step time, in one oracle call.
+
+    Every feasible candidate's block decomposition joins one
+    ``predict_networks`` batch (one forest pass per layer type across *all*
+    candidates); predictors exposing only ``predict_network`` (third-party
+    estimators) fall back to the per-candidate loop with identical scores.
+    """
     candidates = list(candidates) if candidates is not None else default_candidates(chips)
-    valid = []
+    feasible = []
     for c in candidates:
         # feasibility: dp cannot exceed global batch; tp must divide d_ff-ish dims
         if c.dp > max(1, shape.global_batch):
             continue
         if cfg.d_ff and cfg.d_ff % c.tp not in (0,) and cfg.moe_experts == 0:
             continue
-        valid.append((c, estimate_candidate(estimator, cfg, shape, c)))
-    return sorted(valid, key=lambda x: x[1])
+        feasible.append(c)
+    scores = [float("inf")] * len(feasible)
+    networks: list[list[Block]] = []
+    slot_of: list[int] = []
+    for k, c in enumerate(feasible):
+        if _microbatch_infeasible(shape, c):
+            continue
+        networks.append(candidate_blocks(cfg, shape, c))
+        slot_of.append(k)
+    if networks:
+        predict_many = getattr(estimator, "predict_networks", None)
+        if predict_many is not None:
+            preds = predict_many(networks)
+        else:
+            preds = [estimator.predict_network(net) for net in networks]
+        for k, p in zip(slot_of, preds):
+            scores[k] = float(p) * feasible[k].microbatches
+    return sorted(zip(feasible, scores), key=lambda x: x[1])

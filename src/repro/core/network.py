@@ -185,8 +185,37 @@ def decompose(
 
 
 def simulate_network(platform, blocks: Sequence[Block]) -> float:
-    """'Measure' the whole network on a simulated platform (Table-2 ground truth)."""
-    t = 0.0
-    for b in blocks:
-        t += platform.measure_block(list(b.layers), collective_bytes=b.collective_bytes) * b.repeat
-    return t
+    """'Measure' the whole network on a simulated platform (Table-2 ground truth).
+
+    The network is measured as one :class:`~repro.core.batch.BlockBatch`
+    through the platform's columnar block model (cache-partitioned and
+    runtime-sharded under a ``CachedPlatform``); values are bitwise identical
+    to the old per-block ``measure_block`` loop.
+    """
+    return simulate_networks(platform, [blocks])[0]
+
+
+def simulate_networks(platform, networks: Sequence[Sequence[Block]]) -> list[float]:
+    """Batched :func:`simulate_network` over many networks.
+
+    All networks' blocks flatten into one block batch (one platform call, one
+    cache partition; duplicate blocks across networks are measured once under
+    a caching platform), then each network's Eq.-12 sum accumulates in block
+    order — the same left fold as the scalar loop, so the result is bitwise
+    identical for every network.
+    """
+    from repro.core.blocks import measure_block_many
+
+    networks = [list(net) for net in networks]
+    flat = [b for net in networks for b in net]
+    y = measure_block_many(platform, flat)
+    times = y.tolist()
+    out: list[float] = []
+    i = 0
+    for net in networks:
+        t = 0.0
+        for b in net:
+            t += times[i] * b.repeat
+            i += 1
+        out.append(t)
+    return out

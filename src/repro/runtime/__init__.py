@@ -37,8 +37,12 @@ class RuntimeSpec:
 
     #: 1 => in-process serial executor; >1 => process pool of this size
     workers: int = 1
-    #: rows per scheduler chunk (the unit of dispatch, retry and journaling)
-    chunk_size: int = 64
+    #: rows per scheduler chunk (the unit of dispatch, retry and journaling);
+    #: None derives the size adaptively from the platform's measured per-item
+    #: cost so one chunk lands near ``target_chunk_s`` of wall time
+    chunk_size: int | None = None
+    #: adaptive chunk sizing's wall-time target per chunk
+    target_chunk_s: float = 1.0
     #: resubmissions allowed per chunk before the run fails
     max_retries: int = 2
     #: base backoff before a resubmit (doubles per attempt)
@@ -87,6 +91,7 @@ class MeasurementRuntime:
             max_retries=spec.max_retries,
             retry_backoff_s=spec.retry_backoff_s,
             chunk_timeout_s=spec.chunk_timeout_s,
+            target_chunk_s=spec.target_chunk_s,
             stats=self.stats,
         )
 
@@ -94,6 +99,10 @@ class MeasurementRuntime:
     def measure(self, layer_type: str, batch) -> "np.ndarray":  # noqa: F821
         """Measure one (already cache-missed) batch through the scheduler."""
         return self.scheduler.measure_batch(self.platform.cache_key(), layer_type, batch)
+
+    def measure_blocks(self, batch) -> "np.ndarray":  # noqa: F821
+        """Measure one (already cache-missed) block batch through the scheduler."""
+        return self.scheduler.measure_block_batch(self.platform.cache_key(), batch)
 
     # ------------------------------------------------------------------ resume
     def replay_into(self, cache) -> int:

@@ -7,6 +7,11 @@ The journal is a JSONL file with one record per completed scheduler chunk::
     {"v": 1, "platform": "<cache key>", "layer_type": "dense",
      "params": ["tokens", "d_in"], "rows": [[16, 32], ...], "seconds": [...]}
 
+Block chunks (whole-network calibration) share the same file with
+``"kind": "blocks"`` records that serialize a whole
+:class:`~repro.core.batch.BlockBatch` payload; replay routes them into the
+cache's block table, so one journal resumes both pipeline stages.
+
 Each append is flushed and ``fsync``'d before the scheduler moves on, so after
 a crash the journal holds exactly the chunks whose measurements completed.  On
 the next run :meth:`replay_into` preloads the records into the campaign's
@@ -29,10 +34,11 @@ from typing import Iterator
 
 import numpy as np
 
-from repro.core.batch import ConfigBatch
+from repro.core.batch import BlockBatch, ConfigBatch
 
 RECORD_VERSION = 1
 _REQUIRED_KEYS = ("platform", "layer_type", "params", "rows", "seconds")
+_REQUIRED_BLOCK_KEYS = ("platform", "blocks", "seconds")
 
 
 class JournalCorruptionWarning(UserWarning):
@@ -72,6 +78,30 @@ class MeasurementJournal:
         fh.flush()
         os.fsync(fh.fileno())
 
+    def append_block_chunk(
+        self, platform: str, batch: BlockBatch, seconds: np.ndarray
+    ) -> None:
+        """Durably record one measured *block* chunk (write + flush + fsync).
+
+        Block records carry ``"kind": "blocks"`` and serialize the whole
+        :class:`BlockBatch` via its JSON payload; they share the journal file
+        with config records, so one campaign journal resumes both the
+        single-layer and the whole-network calibration stages.
+        """
+        if len(batch) == 0:
+            return
+        record = {
+            "v": RECORD_VERSION,
+            "kind": "blocks",
+            "platform": platform,
+            "blocks": batch.to_payload(),
+            "seconds": np.asarray(seconds, dtype=np.float64).tolist(),
+        }
+        fh = self._open()
+        fh.write(json.dumps(record, separators=(",", ":")) + "\n")
+        fh.flush()
+        os.fsync(fh.fileno())
+
     def close(self) -> None:
         if self._fh is not None:
             self._fh.close()
@@ -97,20 +127,31 @@ class MeasurementJournal:
                     record = json.loads(line)
                     if not isinstance(record, dict):
                         raise ValueError("record is not an object")
-                    for key in _REQUIRED_KEYS:
-                        if key not in record:
-                            raise ValueError(f"missing key {key!r}")
-                    if len(record["rows"]) != len(record["seconds"]):
-                        raise ValueError("rows/seconds length mismatch")
-                    n_params = len(record["params"])
-                    for row in record["rows"]:
-                        if not isinstance(row, list) or len(row) != n_params:
-                            raise ValueError("malformed config row")
-                    # Values must parse too, or replay would abort mid-file on
-                    # e.g. a bit-flipped cell; raises ValueError on non-numeric.
-                    np.asarray(record["rows"], dtype=np.int64)
-                    np.asarray(record["seconds"], dtype=np.float64)
-                except (ValueError, TypeError) as exc:
+                    if record.get("kind") == "blocks":
+                        for key in _REQUIRED_BLOCK_KEYS:
+                            if key not in record:
+                                raise ValueError(f"missing key {key!r}")
+                        # Rebuilding the batch validates the whole payload
+                        # (shapes, index ranges); raises on malformed input.
+                        batch = BlockBatch.from_payload(record["blocks"])
+                        if len(batch) != len(record["seconds"]):
+                            raise ValueError("blocks/seconds length mismatch")
+                        np.asarray(record["seconds"], dtype=np.float64)
+                    else:
+                        for key in _REQUIRED_KEYS:
+                            if key not in record:
+                                raise ValueError(f"missing key {key!r}")
+                        if len(record["rows"]) != len(record["seconds"]):
+                            raise ValueError("rows/seconds length mismatch")
+                        n_params = len(record["params"])
+                        for row in record["rows"]:
+                            if not isinstance(row, list) or len(row) != n_params:
+                                raise ValueError("malformed config row")
+                        # Values must parse too, or replay would abort mid-file
+                        # on e.g. a bit-flipped cell; raises on non-numeric.
+                        np.asarray(record["rows"], dtype=np.int64)
+                        np.asarray(record["seconds"], dtype=np.float64)
+                except (ValueError, TypeError, KeyError) as exc:
                     warnings.warn(
                         f"{self.path}:{lineno}: skipping corrupt journal line ({exc})",
                         JournalCorruptionWarning,
@@ -132,6 +173,16 @@ class MeasurementJournal:
         """
         records = rows = new = 0
         for record in self.iter_records():
+            if record.get("kind") == "blocks":
+                block_batch = BlockBatch.from_payload(record["blocks"])
+                if len(block_batch) == 0:
+                    continue
+                new += cache.preload_blocks(
+                    record["platform"], block_batch, record["seconds"]
+                )
+                records += 1
+                rows += len(block_batch)
+                continue
             values = np.asarray(record["rows"], dtype=np.int64)
             if values.size == 0:
                 continue

@@ -1,12 +1,22 @@
 """MeasurementScheduler: shard a miss sub-batch into chunks, dispatch, merge.
 
 The scheduler is the deterministic heart of the runtime: a batch of ``n``
-configurations is cut into contiguous chunks of ``chunk_size`` rows, every
+configurations *or building blocks* is cut into contiguous chunks, every
 chunk is submitted to the executor up front (so a pool keeps all workers
 busy), and results are merged back **in chunk order** — i.e. in the batch's
-first-occurrence order.  Chunk boundaries depend only on ``chunk_size``, never
-on worker count or completion order, so a campaign produces bitwise-identical
-results with 1, 2 or 16 workers.
+first-occurrence order.  Chunk boundaries never depend on worker count or
+completion order, so a campaign produces bitwise-identical results with 1, 2
+or 16 workers; and because the merge is order-preserving regardless of where
+the chunk boundaries fall, the chunk size itself cannot change results
+either — which is what makes adaptive sizing safe.
+
+Chunk sizing: an explicit ``chunk_size`` is honored as-is.  With
+``chunk_size=None`` (the default via :class:`~repro.runtime.RuntimeSpec`),
+the scheduler derives the size from the run's own measured per-item cost so
+one chunk lands near ``target_chunk_s`` (~1 s) of wall time — big enough to
+amortize IPC for cheap analytical models, small enough to keep retries and
+journal granularity useful for multi-second hardware measurements.  Before
+any cost data exists it starts at :data:`DEFAULT_CHUNK_SIZE`.
 
 Fault handling per chunk:
 
@@ -27,12 +37,19 @@ from __future__ import annotations
 
 import threading
 import time
+from typing import Callable
 
 import numpy as np
 
-from repro.core.batch import ConfigBatch
+from repro.core.batch import BlockBatch, ConfigBatch
 from repro.runtime.journal import MeasurementJournal
 from repro.runtime.stats import RunStats
+
+#: chunk size used before the run has any per-item cost data (PR-3's fixed
+#: default, kept so fresh runs behave exactly as they used to)
+DEFAULT_CHUNK_SIZE = 64
+#: adaptive sizing never exceeds this (bounds retry/journal granularity)
+MAX_CHUNK_SIZE = 4096
 
 
 class MeasurementError(RuntimeError):
@@ -46,37 +63,127 @@ class MeasurementScheduler:
         self,
         executor,
         journal: MeasurementJournal | None = None,
-        chunk_size: int = 64,
+        chunk_size: int | None = None,
         max_retries: int = 2,
         retry_backoff_s: float = 0.05,
         chunk_timeout_s: float | None = None,
+        target_chunk_s: float = 1.0,
         stats: RunStats | None = None,
     ) -> None:
         self.executor = executor
         self.journal = journal
-        self.chunk_size = max(1, int(chunk_size))
+        self.chunk_size = None if chunk_size is None else max(1, int(chunk_size))
         self.max_retries = int(max_retries)
         self.retry_backoff_s = float(retry_backoff_s)
         self.chunk_timeout_s = chunk_timeout_s
+        self.target_chunk_s = float(target_chunk_s)
         self.stats = stats if stats is not None else RunStats()
+        #: per-path (configs vs blocks) [items, wall seconds] cost pools for
+        #: adaptive sizing — a block costs orders of magnitude more than a
+        #: single config, so one runtime serving both paths must not size
+        #: block chunks from config costs (or vice versa)
+        self._path_costs: dict[str, list[float]] = {
+            "configs": [0, 0.0],
+            "blocks": [0, 0.0],
+        }
 
+    # ------------------------------------------------------------- chunk sizing
+    def effective_chunk_size(self, path: str = "configs") -> int:
+        """Chunk size for the next batch: explicit setting, or adaptive.
+
+        Adaptive sizing targets ``target_chunk_s`` of wall time per chunk,
+        from the cost pool of the *same path* (config items and block items
+        have very different unit costs).  The pool's wall time is
+        dispatch-loop time, during which a saturated pool of ``w`` workers
+        measures ``w`` items concurrently — so the true per-item cost is
+        roughly ``w`` times the observed per-item wall, and the size works
+        out to ``target / (per_item_wall * workers)``.
+        """
+        if self.chunk_size is not None:
+            return self.chunk_size
+        measured, spent = self._path_costs.get(path, (0, 0.0))
+        if measured <= 0 or spent <= 0.0:
+            return DEFAULT_CHUNK_SIZE
+        per_item_wall = spent / measured
+        workers = max(1, int(getattr(self.executor, "workers", 1)))
+        size = int(self.target_chunk_s / (per_item_wall * workers))
+        return max(1, min(size, MAX_CHUNK_SIZE))
+
+    # ----------------------------------------------------------------- dispatch
     def measure_batch(
         self, platform_key: str, layer_type: str, batch: ConfigBatch
     ) -> np.ndarray:
-        """Measure a whole batch; returns times aligned with ``batch`` rows."""
+        """Measure a whole config batch; returns times aligned with its rows."""
         n = len(batch)
         if n == 0:
             return np.zeros(0, dtype=np.float64)
-        bounds = [(a, min(a + self.chunk_size, n)) for a in range(0, n, self.chunk_size)]
+        chunk = self.effective_chunk_size("configs")
+        bounds = [(a, min(a + chunk, n)) for a in range(0, n, chunk)]
         subs = [
             ConfigBatch(params=batch.params, values=batch.values[a:b]) for a, b in bounds
         ]
+        journal_append = None
+        if self.journal is not None:
+            journal_append = lambda sub, y: self.journal.append_chunk(  # noqa: E731
+                platform_key, layer_type, sub, y
+            )
+        return self._execute(
+            subs,
+            bounds,
+            n,
+            submit=lambda sub: self.executor.submit(layer_type, sub),
+            journal_append=journal_append,
+            label=layer_type,
+            path="configs",
+        )
+
+    def measure_block_batch(self, platform_key: str, batch: BlockBatch) -> np.ndarray:
+        """Measure a whole block batch; same chunking/retry/journal machinery.
+
+        Chunks are contiguous *block* ranges (a chunk carries all of its
+        blocks' layers), dispatched through the executor's ``submit_blocks``
+        and journaled as block records, so whole-network calibration gets the
+        same determinism, fault-tolerance and crash-safe resume as the config
+        path.
+        """
+        n = len(batch)
+        if n == 0:
+            return np.zeros(0, dtype=np.float64)
+        chunk = self.effective_chunk_size("blocks")
+        bounds = [(a, min(a + chunk, n)) for a in range(0, n, chunk)]
+        subs = [batch.take(np.arange(a, b)) for a, b in bounds]
+        journal_append = None
+        if self.journal is not None:
+            journal_append = lambda sub, y: self.journal.append_block_chunk(  # noqa: E731
+                platform_key, sub, y
+            )
+        return self._execute(
+            subs,
+            bounds,
+            n,
+            submit=self.executor.submit_blocks,
+            journal_append=journal_append,
+            label="<blocks>",
+            path="blocks",
+        )
+
+    def _execute(
+        self,
+        subs: list,
+        bounds: list[tuple[int, int]],
+        n: int,
+        submit: Callable,
+        journal_append: Callable | None,
+        label: str,
+        path: str = "configs",
+    ) -> np.ndarray:
         # A pool wants every chunk queued up front so all workers stay busy; a
         # serial executor measures *at submit time*, so eager submission would
         # complete the whole batch before the first journal append — one chunk
         # at a time keeps the journal's loses-at-most-one-chunk guarantee.
         prefetch = getattr(self.executor, "workers", 1) > 1
         t0 = time.perf_counter()
+        measured_before = self.stats.measured
         futures: list = [None] * len(bounds)
         out = np.empty(n, dtype=np.float64)
         # Durability is per *completed* chunk, not per merged chunk: with a
@@ -93,17 +200,17 @@ class MeasurementScheduler:
         finalized: set[int] = set()
 
         def journal_chunk(index: int, y: np.ndarray, authoritative: bool) -> None:
-            if self.journal is None:
+            if journal_append is None:
                 return
             with journal_lock:
                 if authoritative:
                     previous = journaled.get(index)
                     if previous is None or not np.array_equal(previous, y):
-                        self.journal.append_chunk(platform_key, layer_type, subs[index], y)
+                        journal_append(subs[index], y)
                         journaled[index] = y
                     finalized.add(index)
                 elif index not in finalized and index not in journaled:
-                    self.journal.append_chunk(platform_key, layer_type, subs[index], y)
+                    journal_append(subs[index], y)
                     journaled[index] = y
 
         def completion_callback(index: int):
@@ -123,14 +230,14 @@ class MeasurementScheduler:
             if prefetch:
                 self.stats.in_flight += len(bounds)
                 for index, sub in enumerate(subs):
-                    futures[index] = self._submit(layer_type, sub)
-                    if self.journal is not None:
+                    futures[index] = self._submit(submit, sub, label)
+                    if journal_append is not None:
                         futures[index].add_done_callback(completion_callback(index))
             for index, (a, b) in enumerate(bounds):
                 if not prefetch:
                     self.stats.in_flight += 1
-                    futures[index] = self._submit(layer_type, subs[index])
-                y = self._gather(layer_type, subs[index], futures[index], index)
+                    futures[index] = self._submit(submit, subs[index], label)
+                y = self._gather(submit, label, subs[index], futures[index], index)
                 out[a:b] = y
                 self.stats.in_flight -= 1
                 self.stats.chunks += 1
@@ -140,11 +247,15 @@ class MeasurementScheduler:
             # On abort the remaining submissions are moot; don't leave the
             # progress surface claiming they are still in flight.
             self.stats.in_flight = 0
-            self.stats.measure_seconds += time.perf_counter() - t0
+            wall = time.perf_counter() - t0
+            self.stats.measure_seconds += wall
+            cost = self._path_costs.setdefault(path, [0, 0.0])
+            cost[0] += self.stats.measured - measured_before
+            cost[1] += wall
         return out
 
     # ---------------------------------------------------------------- internals
-    def _submit(self, layer_type: str, sub: ConfigBatch):
+    def _submit(self, submit: Callable, sub, label: str):
         """Submit one chunk; rebuild a broken pool once before giving up.
 
         ``ProcessPoolExecutor.submit`` raises ``BrokenProcessPool`` *at submit*
@@ -153,15 +264,17 @@ class MeasurementScheduler:
         worker death into an ordinary chunk retry instead of a lost run.
         """
         try:
-            return self.executor.submit(layer_type, sub)
+            return submit(sub)
         except Exception:
             respawn = getattr(self.executor, "respawn", None)
             if respawn is None:
                 raise
             respawn()
-            return self.executor.submit(layer_type, sub)
+            return submit(sub)
 
-    def _gather(self, layer_type: str, sub: ConfigBatch, future, index: int) -> np.ndarray:
+    def _gather(
+        self, submit: Callable, label: str, sub, future, index: int
+    ) -> np.ndarray:
         attempt = 0
         while True:
             # A resubmission lands at the back of the pool's queue, behind
@@ -184,17 +297,17 @@ class MeasurementScheduler:
                 if attempt > self.max_retries:
                     self.stats.failures += 1
                     raise MeasurementError(
-                        f"chunk {index} of {layer_type!r} ({len(sub)} configs) "
+                        f"chunk {index} of {label!r} ({len(sub)} items) "
                         f"failed after {attempt} attempt(s): {exc}"
                     ) from exc
                 self.stats.retries += 1
                 future.cancel()
                 time.sleep(self.retry_backoff_s * (2 ** (attempt - 1)))
                 try:
-                    future = self._submit(layer_type, sub)
+                    future = self._submit(submit, sub, label)
                 except Exception as submit_exc:
                     self.stats.failures += 1
                     raise MeasurementError(
-                        f"chunk {index} of {layer_type!r} could not be resubmitted "
+                        f"chunk {index} of {label!r} could not be resubmitted "
                         f"after a failed attempt: {submit_exc}"
                     ) from submit_exc

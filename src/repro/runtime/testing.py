@@ -16,7 +16,7 @@ import time
 import numpy as np
 
 from repro.accelerators.base import Platform
-from repro.api.registry import register_platform
+from repro.registry import register_platform
 from repro.core.batch import ConfigBatch
 from repro.core.prs import Config, ParamSpace
 

@@ -1,8 +1,9 @@
 """Measurement executors: in-process serial and ``concurrent.futures`` pool.
 
-Both expose the same two-method surface the scheduler drives::
+Both expose the same surface the scheduler drives::
 
-    submit(layer_type, batch) -> Future[np.ndarray]   # one chunk
+    submit(layer_type, batch) -> Future[np.ndarray]    # one config chunk
+    submit_blocks(block_batch) -> Future[np.ndarray]   # one block chunk
     close()
 
 :class:`SerialExecutor` measures on the in-process platform object — the
@@ -28,7 +29,7 @@ from concurrent.futures import Future, ProcessPoolExecutor
 
 import numpy as np
 
-from repro.core.batch import ConfigBatch
+from repro.core.batch import BlockBatch, ConfigBatch
 
 #: per-worker-process platform instance, built once by the pool initializer
 _WORKER_PLATFORM = None
@@ -40,10 +41,10 @@ def _init_worker(spec) -> None:
     name, kwargs, module = spec
     if module:
         importlib.import_module(module)
-    # Imported here, not at module top: the parent may construct a WorkerPool
-    # while repro.api is still initializing, and workers should resolve the
-    # factory registered by `module` without loading every built-in platform.
-    from repro.api import registry
+    # Imported here, not at module top: workers resolve the factory
+    # registered by `module` through the light top-level registry, without
+    # loading the repro.api package or every built-in platform.
+    from repro import registry
 
     factory = registry.try_get_factory(name)
     if factory is not None:
@@ -56,6 +57,11 @@ def _measure_chunk(layer_type: str, params: tuple, values: np.ndarray) -> np.nda
     """Worker-side entry point: measure one chunk on the per-process platform."""
     batch = ConfigBatch(params=tuple(params), values=np.asarray(values, dtype=np.int64))
     return np.asarray(_WORKER_PLATFORM.measure_batch(layer_type, batch), dtype=np.float64)
+
+
+def _measure_block_chunk(batch: BlockBatch) -> np.ndarray:
+    """Worker-side entry point for one block chunk (BlockBatch pickles whole)."""
+    return np.asarray(_WORKER_PLATFORM.measure_block_batch(batch), dtype=np.float64)
 
 
 class SerialExecutor:
@@ -75,6 +81,16 @@ class SerialExecutor:
         try:
             future.set_result(
                 np.asarray(self.platform.measure_batch(layer_type, batch), dtype=np.float64)
+            )
+        except Exception as exc:
+            future.set_exception(exc)
+        return future
+
+    def submit_blocks(self, batch: BlockBatch) -> Future:
+        future: Future = Future()
+        try:
+            future.set_result(
+                np.asarray(self.platform.measure_block_batch(batch), dtype=np.float64)
             )
         except Exception as exc:
             future.set_exception(exc)
@@ -111,18 +127,46 @@ class WorkerPool:
     def submit(self, layer_type: str, batch: ConfigBatch) -> Future:
         return self._pool.submit(_measure_chunk, layer_type, batch.params, batch.values)
 
+    def submit_blocks(self, batch: BlockBatch) -> Future:
+        return self._pool.submit(_measure_block_chunk, batch)
+
+    @staticmethod
+    def _shutdown(pool: ProcessPoolExecutor, wait: bool) -> None:
+        """Shut a pool down; on non-waiting shutdown, *terminate* survivors.
+
+        ``ProcessPoolExecutor`` workers are non-daemon processes, and
+        ``concurrent.futures`` joins them from an atexit hook — so merely
+        abandoning a worker wedged inside a measurement (the very thing
+        ``chunk_timeout_s`` exists to survive) would hang the campaign
+        process at interpreter exit.  Explicit ``terminate()`` makes
+        non-waiting close actually abandon them; idle workers just exit.
+        """
+        procs = list((pool._processes or {}).values())
+        pool.shutdown(wait=wait, cancel_futures=True)
+        if wait:
+            return
+        for p in procs:
+            if p.is_alive():
+                p.terminate()
+        for p in procs:
+            p.join(timeout=5.0)
+        for p in procs:
+            # SIGTERM can be blocked (native handlers) or deferred by
+            # uninterruptible kernel I/O; escalate so the atexit join can
+            # never wait on a survivor.
+            if p.is_alive():
+                p.kill()
+                p.join(timeout=5.0)
+
     def respawn(self) -> None:
         """Replace a broken pool (a worker died abruptly) with a fresh one.
 
         Futures pending on the old pool fail with ``BrokenProcessPool``; the
         scheduler's per-chunk retry resubmits them here.
         """
-        self._pool.shutdown(wait=False, cancel_futures=True)
+        self._shutdown(self._pool, wait=False)
         self.respawns += 1
         self._pool = self._make_pool()
 
-    def close(self) -> None:
-        # wait=False: a wedged worker (the very thing chunk_timeout_s exists
-        # to survive) must not turn teardown into a hang; idle workers exit on
-        # their own and abandoned processes die with the parent.
-        self._pool.shutdown(wait=False, cancel_futures=True)
+    def close(self, wait: bool = False) -> None:
+        self._shutdown(self._pool, wait=wait)

@@ -34,6 +34,7 @@ from repro.runtime import (
     MeasurementRuntime,
     MeasurementScheduler,
     SerialExecutor,
+    WorkerPool,
 )
 from repro.runtime.testing import SteppedSimPlatform
 
@@ -528,6 +529,41 @@ class TestRetryAndTimeout:
         y = scheduler.measure_batch("stepped_sim", "toy", batch)
         assert np.array_equal(y, platform.measure_batch("toy", batch))
         assert scheduler.stats.retries == 1
+
+
+# ------------------------------------------------------------- pool teardown
+class TestWedgedWorkerClose:
+    def test_close_terminates_wedged_worker_within_bounded_time(self):
+        """``close(wait=False)`` must actually abandon a wedged worker.
+
+        ProcessPoolExecutor workers are non-daemon, and concurrent.futures
+        joins them from an atexit hook — without an explicit ``terminate()``
+        a worker stuck inside a measurement would hang the campaign process
+        at interpreter exit.  The chunk below wedges its worker for ~60 s;
+        close must come back (with every worker process dead) in seconds.
+        """
+        import time
+
+        platform = SteppedSimPlatform(delay_s=1.0)
+        pool = WorkerPool(platform.spawn_spec(), workers=1)
+        batch = ConfigBatch.from_columns(
+            {"a": np.arange(1, 61), "b": (np.arange(1, 61) % 32) + 1}
+        )
+        future = pool.submit("toy", batch)  # ~60 s of emulated measurement
+        deadline = time.perf_counter() + 30
+        while not pool._pool._processes and time.perf_counter() < deadline:
+            time.sleep(0.05)  # wait for the worker process to exist
+        procs = list(pool._pool._processes.values())
+        assert procs, "worker process never spawned"
+
+        t0 = time.perf_counter()
+        pool.close()  # wait=False is the default
+        elapsed = time.perf_counter() - t0
+        assert elapsed < 15, f"close took {elapsed:.1f}s (wedged worker not abandoned)"
+        for p in procs:
+            p.join(timeout=10)
+        assert all(not p.is_alive() for p in procs), "worker survived close"
+        assert not future.done() or future.exception() is not None
 
 
 # ------------------------------------------------------------ progress surface
