@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench bench-engine bench-runtime bench-forest bench-blocks quickstart
+.PHONY: test bench-smoke bench bench-engine bench-runtime bench-forest bench-blocks bench-serve serve-smoke quickstart
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -20,6 +20,12 @@ bench-forest:
 
 bench-blocks:
 	$(PYTHON) -m benchmarks.bench_blocks
+
+bench-serve:
+	$(PYTHON) -m benchmarks.bench_serve
+
+serve-smoke:
+	$(PYTHON) -m benchmarks.serve_smoke
 
 bench:
 	$(PYTHON) -m benchmarks.run

@@ -1,0 +1,83 @@
+"""End-to-end oracle-serving smoke: real socket, real client, stats checked.
+
+Trains a tiny stepped_sim oracle, brings up the NDJSON socket server on an
+ephemeral TCP port (exactly what ``serve.py --serve-oracle`` runs), then
+drives it through :class:`repro.serving.OracleClient` the way an external
+caller would: ping, single-layer predicts (twice, so the second round must
+come from the LRU result cache), a whole-network estimate, and a stats call
+whose counters are asserted against what was just done.  Exits non-zero on
+any mismatch — this is the CI gate that the served path works over a real
+wire, not just in-process.
+
+  PYTHONPATH=src python -m benchmarks.serve_smoke
+"""
+
+from __future__ import annotations
+
+import repro.runtime.testing  # noqa: F401  (registers the stepped_sim platform)
+from repro.api import Campaign, CampaignSpec
+from repro.core.batch import ConfigBatch
+from repro.core.blocks import Block
+from repro.serving import OracleClient, OracleServer, OracleSocketServer, ServeSpec
+
+PLATFORM = "stepped_sim"
+
+
+def main() -> dict:
+    spec = CampaignSpec(
+        platform=PLATFORM,
+        layer_types=("toy",),
+        n_samples=80,
+        seed=0,
+        forest_kwargs={"n_estimators": 6, "max_depth": 10},
+    )
+    oracle = Campaign(spec).run()
+    server = OracleServer(
+        oracles={PLATFORM: oracle}, spec=ServeSpec(window_s=0.001)
+    )
+    configs = [{"a": a, "b": b} for a, b in [(1, 1), (8, 4), (17, 9), (64, 32)]]
+    network = [
+        Block(kind="k", layers=(("toy", {"a": 4, "b": 2}),), repeat=2),
+        Block(kind="k", layers=(("toy", {"a": 16, "b": 8}),), collective_bytes=32.0),
+    ]
+    expected = [
+        float(v)
+        for v in oracle.predict("toy", ConfigBatch.from_dicts(configs, params=("a", "b")))
+    ]
+    expected_net = float(oracle.predict_network(network))
+
+    with OracleSocketServer(server, port=0).start() as sock:
+        host, port = sock.address
+        print(f"serve_smoke: socket server on {host}:{port}")
+        with OracleClient(address=(host, port)) as client:
+            assert client.ping(), "ping failed"
+            assert PLATFORM in client.platforms()["loaded"]
+
+            cold = client.predict(PLATFORM, "toy", configs)
+            warm = client.predict(PLATFORM, "toy", configs)
+            assert cold == expected, "served answers diverge from direct oracle"
+            assert warm == expected, "cache replay diverges from direct oracle"
+            assert client.predict_network(PLATFORM, network) == expected_net
+
+            stats = client.stats()
+            cache = stats["result_cache"]
+            endpoints = stats["metrics"]["endpoints"]
+            assert cache["hits"] >= len(configs), cache
+            assert cache["misses"] >= len(configs), cache
+            assert endpoints["predict"]["requests"] == 2, endpoints
+            assert endpoints["predict"]["items"] == 2 * len(configs), endpoints
+            assert endpoints["predict"]["errors"] == 0, endpoints
+            assert endpoints["predict"]["p99_ms"] is not None, endpoints
+            assert endpoints["predict_networks"]["requests"] == 1, endpoints
+            assert stats["uptime_s"] > 0.0
+
+    print(
+        f"serve_smoke: OK — {len(configs)} configs bitwise-parity over TCP, "
+        f"cache hit_rate={cache['hit_rate']:.2f}, "
+        f"predict p99={endpoints['predict']['p99_ms']:.2f} ms"
+    )
+    return stats
+
+
+if __name__ == "__main__":
+    main()

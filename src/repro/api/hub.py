@@ -182,6 +182,55 @@ class EstimatorHub:
         with open(path) as f:
             return json.load(f)
 
+    # --------------------------------------------------------------------- gc
+    def gc(self, keep: int | None = None, compact_journal: bool = True) -> dict:
+        """Drop superseded artifacts: old estimator steps, stale staging dirs,
+        and (optionally) duplicate journal records.
+
+        ``CheckpointManager`` already garbage-collects on *save*, but a hub
+        that only ever loads (a long-lived oracle server) never saves — its
+        directory keeps whatever the last campaign left: superseded
+        ``step_*`` dirs beyond ``keep``, ``.tmp`` staging dirs from crashed
+        saves, and an append-only measurement journal full of duplicate
+        records.  This is the explicit GC hook (the serving layer's ``gc``
+        op calls it).  The latest checkpoint per slot is never touched, so
+        reloads after ``gc`` are bitwise identical.
+
+        Returns ``{"steps_removed", "tmp_removed", "journal": compact stats
+        or None}``.
+        """
+        import shutil
+
+        keep = self.keep if keep is None else keep
+        steps_removed = tmp_removed = 0
+        for platform in self.platforms():
+            for layer_type in self.layer_types(platform):
+                slot = os.path.join(self.directory, platform, layer_type)
+                mgr = CheckpointManager(slot, keep=max(1, keep))
+                steps = mgr.all_steps()
+                for step in steps[: -max(1, keep)]:
+                    shutil.rmtree(
+                        os.path.join(slot, f"step_{step:09d}"), ignore_errors=True
+                    )
+                    steps_removed += 1
+                for entry in os.listdir(slot):
+                    if entry.endswith(".tmp"):
+                        shutil.rmtree(os.path.join(slot, entry), ignore_errors=True)
+                        tmp_removed += 1
+        journal_stats = None
+        if compact_journal:
+            from repro.checkpoint.manager import journal_path
+            from repro.runtime.journal import MeasurementJournal
+
+            path = journal_path(self.directory)
+            if os.path.exists(path):
+                journal_stats = MeasurementJournal(path).compact()
+        return {
+            "steps_removed": steps_removed,
+            "tmp_removed": tmp_removed,
+            "journal": journal_stats,
+        }
+
     # ----------------------------------------------------------------- listing
     def platforms(self) -> tuple[str, ...]:
         return tuple(

@@ -68,6 +68,43 @@ class PerfOracle:
     def predict_one(self, layer_type: str, cfg: Config) -> float:
         return float(self.predict(layer_type, [cfg])[0])
 
+    def predict_many(
+        self, items: Sequence[tuple[str, Sequence[Config] | ConfigBatch]]
+    ) -> list[np.ndarray]:
+        """Batch-entry hook for coalesced serving: many ``(layer_type, configs)``
+        requests through **one** forest pass per ``(layer_type, params)`` group.
+
+        This is what the serving layer's admission batcher calls: concurrent
+        ``predict`` requests for the same layer type are concatenated into a
+        single :meth:`predict` call and each requester is answered from its
+        slice.  Forest predictions are row-independent, so every slice is
+        bitwise identical to a standalone ``predict`` call (asserted in
+        tests/test_serving.py).  Heterogeneous/dict-list items predict
+        standalone, identically.
+        """
+        items = [
+            (
+                lt,
+                cfgs
+                if isinstance(cfgs, ConfigBatch)
+                else ConfigBatch.from_dicts(list(cfgs)),
+            )
+            for lt, cfgs in items
+        ]
+        groups: dict[tuple, list[int]] = {}
+        for i, (lt, batch) in enumerate(items):
+            groups.setdefault((lt, batch.params), []).append(i)
+        out: list[np.ndarray | None] = [None] * len(items)
+        for (lt, _params), idxs in groups.items():
+            merged = ConfigBatch.concat([items[i][1] for i in idxs])
+            y = self.predict(lt, merged)
+            a = 0
+            for i in idxs:
+                n = len(items[i][1])
+                out[i] = y[a : a + n]
+                a += n
+        return out  # type: ignore[return-value]
+
     def evaluate(
         self, platform: Platform, layer_type: str, test_configs: Sequence[Config]
     ) -> dict[str, float]:
@@ -153,6 +190,46 @@ class PerfOracle:
                 t += self._combine(b, all_times[i]) * b.repeat
                 i += 1
             out[j] = t
+        return out
+
+    def network_keys(
+        self, networks: Sequence[Sequence[Block]]
+    ) -> list[tuple | None]:
+        """Canonical result-cache key per network (the serving layer's LRU key).
+
+        Built from the blocks' measurement fingerprints
+        (:meth:`repro.core.batch.BlockBatch.fingerprints`) **plus** each
+        block's ``kind`` and ``repeat`` — the fingerprint deliberately
+        excludes those because they don't change what a platform measures,
+        but they *do* change how this oracle combines layer times (Eq. 9/12),
+        so a prediction cache must key on them.  Networks whose configs can't
+        be fingerprinted (non-integer values) get ``None`` — callers skip
+        caching and predict directly.
+        """
+        from repro.core.batch import BlockBatch
+
+        out: list[tuple | None] = []
+        for net in networks:
+            net = list(net)
+            if not net:
+                out.append(("net",))
+                continue
+            try:
+                bb = BlockBatch.from_blocks(net)
+            except (ValueError, TypeError):
+                out.append(None)
+                continue
+            out.append(
+                (
+                    "net",
+                    tuple(
+                        (fp, kind, rep)
+                        for fp, kind, rep in zip(
+                            bb.fingerprints(), bb.kinds, bb.repeat.tolist()
+                        )
+                    ),
+                )
+            )
         return out
 
     def evaluate_networks(

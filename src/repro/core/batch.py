@@ -382,9 +382,76 @@ class BlockBatch:
 
     @classmethod
     def concat(cls, batches: Iterable["BlockBatch"]) -> "BlockBatch":
-        """Stack block batches (group tables are re-merged by first occurrence)."""
-        blocks = [b for bb in batches for b in bb.to_blocks()]
-        return cls.from_blocks(blocks)
+        """Stack block batches (group tables are re-merged by first occurrence).
+
+        Columnar-native: groups keyed by ``(layer_type, params)`` are merged
+        across batches with one :meth:`ConfigBatch.concat` per merged group —
+        blocks never round-trip through ``Block`` objects.  For inputs whose
+        groups are in first-occurrence order (every constructor produces
+        this), the result is field-for-field identical to rebuilding via
+        ``from_blocks(a.to_blocks() + b.to_blocks() + ...)``, fingerprints
+        included (asserted in tests/test_block_batch.py).
+        """
+        batches = [b for b in batches if len(b)]
+        if not batches:
+            return cls(
+                kinds=(),
+                collective_bytes=np.zeros(0, dtype=np.float64),
+                repeat=np.zeros(0, dtype=np.float64),
+                block_id=np.empty(0, dtype=np.int64),
+                group_of=np.empty(0, dtype=np.int64),
+                row_of=np.empty(0, dtype=np.int64),
+                group_types=(),
+                group_configs=(),
+            )
+        if len(batches) == 1:
+            return batches[0]
+        key_to_group: dict[tuple, int] = {}
+        group_types: list[str] = []
+        #: per merged group: member ConfigBatches in append order
+        members: list[list[ConfigBatch]] = []
+        #: per merged group: rows accumulated so far (row_of offset)
+        row_counts: list[int] = []
+        group_of_parts: list[np.ndarray] = []
+        row_of_parts: list[np.ndarray] = []
+        block_id_parts: list[np.ndarray] = []
+        block_offset = 0
+        for b in batches:
+            remap = np.empty(max(1, len(b.group_types)), dtype=np.int64)
+            offsets = np.empty(max(1, len(b.group_types)), dtype=np.int64)
+            for lg, (lt, cb) in enumerate(zip(b.group_types, b.group_configs)):
+                key = (lt, cb.params)
+                g = key_to_group.get(key)
+                if g is None:
+                    g = len(group_types)
+                    key_to_group[key] = g
+                    group_types.append(lt)
+                    members.append([])
+                    row_counts.append(0)
+                remap[lg] = g
+                offsets[lg] = row_counts[g]
+                members[g].append(cb)
+                row_counts[g] += len(cb)
+            group_of_parts.append(remap[b.group_of])
+            row_of_parts.append(b.row_of + offsets[b.group_of])
+            block_id_parts.append(b.block_id + block_offset)
+            block_offset += len(b)
+        out = cls(
+            kinds=tuple(k for b in batches for k in b.kinds),
+            collective_bytes=np.concatenate([b.collective_bytes for b in batches]),
+            repeat=np.concatenate([b.repeat for b in batches]),
+            block_id=np.concatenate(block_id_parts),
+            group_of=np.concatenate(group_of_parts),
+            row_of=np.concatenate(row_of_parts),
+            group_types=tuple(group_types),
+            group_configs=tuple(ConfigBatch.concat(m) for m in members),
+        )
+        memos = [b.__dict__.get("_fingerprints") for b in batches]
+        if all(m is not None for m in memos):
+            # fingerprints are per-block and order-preserving: stitch, don't
+            # recompute
+            object.__setattr__(out, "_fingerprints", [fp for m in memos for fp in m])
+        return out
 
     # ------------------------------------------------------------- inspection
     def __len__(self) -> int:

@@ -8,6 +8,15 @@ decode step time on the TPU-v5e platform *before* anything is compiled —
 the serving analogue of the advisor use-case.  ``--hub-dir`` reloads a
 persisted oracle (see repro.api.EstimatorHub) instead of training one
 in-process; ``--estimate-only`` skips the real run entirely.
+
+``--serve-oracle`` turns the launcher into the estimation *service*: it
+loads the hub once and serves predict / predict_networks / autotune / stats
+over line-delimited JSON (``--port`` for TCP, ``--unix-socket`` for a local
+socket; see :mod:`repro.serving`).  This mode is jax-free — forests are
+numpy — so the server starts in milliseconds and runs anywhere:
+
+  PYTHONPATH=src python -m repro.launch.serve --serve-oracle \
+      --hub-dir runs/hub --port 7070 --warm-platforms tpu_v5e_gray
 """
 
 from __future__ import annotations
@@ -15,20 +24,24 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.distributed import single_device_rules, use_rules
-from repro.models import transformer as T
-from repro.models.config import reduced
-from repro.models.kvcache import init_cache
-from repro.train.steps import make_serve_step
+
+# jax (and the model stack built on it) is imported lazily inside the paths
+# that compile/run a real model; the oracle paths (--estimate-only,
+# --serve-oracle) stay importable on a jax-free box.
 
 
 def generate(cfg, params, prompts: np.ndarray, gen_len: int, extras: dict | None = None):
     """Greedy generation: prefill via forward-with-cache, then decode steps."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import transformer as T
+    from repro.models.kvcache import init_cache
+    from repro.train.steps import make_serve_step
+
     b, s = prompts.shape
     cache = init_cache(cfg, b, s + gen_len)
     if cfg.family == "audio":
@@ -104,9 +117,37 @@ def estimate_decode_step(cfg, batch: int, seq_len: int,
     return oracle.predict_network(blocks)
 
 
+def serve_oracle(args) -> None:
+    """Run the oracle estimation service until interrupted (``--serve-oracle``)."""
+    from repro.serving import OracleServer, OracleSocketServer, ServeSpec
+
+    if not args.hub_dir:
+        raise SystemExit("--serve-oracle requires --hub-dir (a trained EstimatorHub)")
+    spec = ServeSpec(
+        hub_dir=args.hub_dir,
+        platforms=tuple(args.warm_platforms or ()),
+        window_s=args.window_ms / 1e3,
+        cache_capacity=args.cache_capacity,
+    )
+    server = OracleServer(spec=spec)
+    sock = OracleSocketServer(
+        server, host=args.host, port=args.port, unix_socket=args.unix_socket
+    )
+    where = sock.address if args.unix_socket else "%s:%d" % sock.address
+    print(f"oracle server on {where} (hub: {args.hub_dir}, "
+          f"platforms: {server.platforms()['hub']}, "
+          f"window: {args.window_ms:.1f} ms)")
+    try:
+        sock.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        sock.close()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -123,10 +164,32 @@ def main() -> None:
     ap.add_argument("--journal-dir", default=None,
                     help="directory for the crash-safe measurement journal "
                          "(interrupted estimate campaigns resume from it)")
+    ap.add_argument("--serve-oracle", action="store_true",
+                    help="serve oracle estimates over NDJSON sockets instead of "
+                         "running a model (see repro.serving)")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="bind address for --serve-oracle TCP mode")
+    ap.add_argument("--port", type=int, default=7070,
+                    help="TCP port for --serve-oracle (0 = ephemeral)")
+    ap.add_argument("--unix-socket", default=None,
+                    help="serve on a unix socket path instead of TCP")
+    ap.add_argument("--warm-platforms", nargs="*", default=None,
+                    help="platforms to load eagerly at server startup")
+    ap.add_argument("--window-ms", type=float, default=2.0,
+                    help="admission-batching window in milliseconds")
+    ap.add_argument("--cache-capacity", type=int, default=65536,
+                    help="LRU result-cache capacity (entries)")
     args = ap.parse_args()
 
+    if args.serve_oracle:
+        serve_oracle(args)
+        return
+    if not args.arch:
+        ap.error("--arch is required unless --serve-oracle is given")
     cfg = get_config(args.arch)
     if args.reduced:
+        from repro.models.config import reduced
+
         cfg = reduced(cfg)
     if args.estimate or args.estimate_only:
         t_step = estimate_decode_step(
@@ -138,6 +201,11 @@ def main() -> None:
               f"(~{args.batch / max(t_step, 1e-12):.0f} tok/s)")
         if args.estimate_only:
             return
+    import jax
+
+    from repro.distributed import single_device_rules, use_rules
+    from repro.models import transformer as T
+
     rules = single_device_rules()
     with use_rules(rules):
         params = T.init_params(cfg, jax.random.PRNGKey(0))

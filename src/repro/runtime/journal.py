@@ -160,6 +160,122 @@ class MeasurementJournal:
                     continue
                 yield record
 
+    # ---------------------------------------------------------------- compact
+    def compact(self) -> dict[str, int]:
+        """Rewrite the journal with one record per measurement (GC for JSONL).
+
+        A long campaign's journal accumulates duplicates: retried chunks
+        append superseding records, restarted runs re-journal overlapping
+        grids, and the file only ever grows.  Compaction rewrites it keeping
+        exactly one copy of each unique measurement — the **final** value
+        (replay is last-writer-wins, see :meth:`replay_into`) under the
+        **first-occurrence** key order, so replaying the compacted journal
+        populates a cache bitwise-identically to replaying the original.
+
+        Config rows are canonicalised by their sorted ``(param, value)``
+        items, so the same configuration journaled under differently-ordered
+        param tuples still compacts to one row (owned by the group that saw
+        it first).  Block records compact per platform by measurement
+        fingerprint.  The rewrite is crash-safe: staged to ``<path>.tmp``,
+        fsync'd, then atomically ``os.replace``'d over the original.
+
+        Returns ``{"records_in", "records_out", "rows_in", "rows_out",
+        "bytes_in", "bytes_out"}``.
+        """
+        if not os.path.exists(self.path):
+            return {
+                "records_in": 0, "records_out": 0, "rows_in": 0,
+                "rows_out": 0, "bytes_in": 0, "bytes_out": 0,
+            }
+        self.close()  # the append handle would keep writing past the rewrite
+        bytes_in = os.path.getsize(self.path)
+
+        final: dict[tuple, float] = {}          # canonical key -> last value
+        order: list[tuple] = []                 # group keys, first occurrence
+        group_rows: dict[tuple, list[tuple]] = {}   # cfg group -> owned keys
+        row_values: dict[tuple, list[int]] = {}     # owned key -> row (group order)
+        block_parts: dict[str, list] = {}       # platform -> owned sub-batches
+        block_keys: dict[str, list[tuple]] = {} # platform -> owned keys, in order
+        records_in = rows_in = 0
+
+        for record in self.iter_records():
+            records_in += 1
+            if record.get("kind") == "blocks":
+                platform = record["platform"]
+                batch = BlockBatch.from_payload(record["blocks"])
+                rows_in += len(batch)
+                group = ("blk", platform)
+                keys = [(platform, fp) for fp in batch.fingerprints()]
+                owned = []
+                for i, (key, sec) in enumerate(zip(keys, record["seconds"])):
+                    if key not in final:
+                        if platform not in block_parts:
+                            order.append(group)
+                            block_parts[platform] = []
+                            block_keys[platform] = []
+                        owned.append(i)
+                        block_keys[platform].append(key)
+                    final[key] = float(sec)
+                if owned:
+                    block_parts[platform].append(
+                        batch.take(np.asarray(owned, dtype=np.int64))
+                    )
+                continue
+            platform, layer_type = record["platform"], record["layer_type"]
+            params = tuple(record["params"])
+            group = ("cfg", platform, layer_type, params)
+            rows_in += len(record["rows"])
+            for row, sec in zip(record["rows"], record["seconds"]):
+                key = (platform, layer_type, tuple(sorted(zip(params, row))))
+                if key not in final:
+                    if group not in group_rows:
+                        order.append(group)
+                        group_rows[group] = []
+                    group_rows[group].append(key)
+                    row_values[key] = [int(v) for v in row]
+                final[key] = float(sec)
+
+        tmp = self.path + ".tmp"
+        records_out = rows_out = 0
+        with open(tmp, "w", encoding="utf-8") as fh:
+            for group in order:
+                if group[0] == "blk":
+                    _, platform = group
+                    merged = BlockBatch.concat(block_parts[platform])
+                    record = {
+                        "v": RECORD_VERSION,
+                        "kind": "blocks",
+                        "platform": platform,
+                        "blocks": merged.to_payload(),
+                        "seconds": [final[k] for k in block_keys[platform]],
+                    }
+                    rows_out += len(merged)
+                else:
+                    _, platform, layer_type, params = group
+                    keys = group_rows[group]
+                    record = {
+                        "v": RECORD_VERSION,
+                        "platform": platform,
+                        "layer_type": layer_type,
+                        "params": list(params),
+                        "rows": [row_values[k] for k in keys],
+                        "seconds": [final[k] for k in keys],
+                    }
+                    rows_out += len(keys)
+                fh.write(json.dumps(record, separators=(",", ":")) + "\n")
+                records_out += 1
+            fh.flush()
+            os.fsync(fh.fileno())
+        os.replace(tmp, self.path)
+        return {
+            "records_in": records_in,
+            "records_out": records_out,
+            "rows_in": rows_in,
+            "rows_out": rows_out,
+            "bytes_in": bytes_in,
+            "bytes_out": os.path.getsize(self.path),
+        }
+
     def replay_into(self, cache) -> dict[str, int]:
         """Preload journaled measurements into a ``MeasurementCache``.
 

@@ -86,21 +86,38 @@ class MeasurementScheduler:
             "configs": [0, 0.0],
             "blocks": [0, 0.0],
         }
+        #: per-path [items, executor-side seconds] pools: execution time
+        #: reported by the worker itself (around the platform call only, no
+        #: IPC/pickling/queue wait) — the preferred cost signal when present
+        self._exec_costs: dict[str, list[float]] = {
+            "configs": [0, 0.0],
+            "blocks": [0, 0.0],
+        }
 
     # ------------------------------------------------------------- chunk sizing
     def effective_chunk_size(self, path: str = "configs") -> int:
         """Chunk size for the next batch: explicit setting, or adaptive.
 
-        Adaptive sizing targets ``target_chunk_s`` of wall time per chunk,
-        from the cost pool of the *same path* (config items and block items
-        have very different unit costs).  The pool's wall time is
-        dispatch-loop time, during which a saturated pool of ``w`` workers
-        measures ``w`` items concurrently — so the true per-item cost is
-        roughly ``w`` times the observed per-item wall, and the size works
-        out to ``target / (per_item_wall * workers)``.
+        Adaptive sizing targets ``target_chunk_s`` of execution time per
+        chunk, from the cost pool of the *same path* (config items and block
+        items have very different unit costs).  Two cost signals exist:
+
+        * **executor-side** (preferred): workers time the platform call
+          itself and return ``(times, exec_seconds)``; a chunk runs on one
+          worker, so the size is simply ``target / per_item_exec`` — no
+          dispatch noise, no worker-count fudge;
+        * **dispatch wall** (fallback, for executors that return bare
+          arrays): dispatch-loop time, during which a saturated pool of
+          ``w`` workers measures ``w`` items concurrently — so the true
+          per-item cost is roughly ``w`` times the observed per-item wall,
+          and the size works out to ``target / (per_item_wall * workers)``.
         """
         if self.chunk_size is not None:
             return self.chunk_size
+        measured, spent = self._exec_costs.get(path, (0, 0.0))
+        if measured > 0 and spent > 0.0:
+            size = int(self.target_chunk_s / (spent / measured))
+            return max(1, min(size, MAX_CHUNK_SIZE))
         measured, spent = self._path_costs.get(path, (0, 0.0))
         if measured <= 0 or spent <= 0.0:
             return DEFAULT_CHUNK_SIZE
@@ -108,6 +125,23 @@ class MeasurementScheduler:
         workers = max(1, int(getattr(self.executor, "workers", 1)))
         size = int(self.target_chunk_s / (per_item_wall * workers))
         return max(1, min(size, MAX_CHUNK_SIZE))
+
+    @staticmethod
+    def _split_result(result) -> tuple:
+        """Split an executor result into ``(times, exec_seconds | None)``.
+
+        The built-in executors return ``(times, exec_seconds)`` with the
+        worker-side chunk execution time; third-party executors (and older
+        test doubles) may return a bare array — both are accepted, bare
+        results just contribute no executor-side cost sample.
+        """
+        if (
+            isinstance(result, tuple)
+            and len(result) == 2
+            and isinstance(result[1], (int, float))
+        ):
+            return result[0], float(result[1])
+        return result, None
 
     # ----------------------------------------------------------------- dispatch
     def measure_batch(
@@ -217,7 +251,8 @@ class MeasurementScheduler:
             def callback(fut) -> None:
                 if fut.cancelled() or fut.exception() is not None:
                     return
-                y = np.asarray(fut.result(), dtype=np.float64)
+                y, _ = MeasurementScheduler._split_result(fut.result())
+                y = np.asarray(y, dtype=np.float64)
                 if y.shape != (len(subs[index]),):
                     return  # malformed result: the merge loop will retry it
                 try:
@@ -237,11 +272,16 @@ class MeasurementScheduler:
                 if not prefetch:
                     self.stats.in_flight += 1
                     futures[index] = self._submit(submit, subs[index], label)
-                y = self._gather(submit, label, subs[index], futures[index], index)
+                y, exec_s = self._gather(submit, label, subs[index], futures[index], index)
                 out[a:b] = y
                 self.stats.in_flight -= 1
                 self.stats.chunks += 1
                 self.stats.measured += b - a
+                if exec_s is not None:
+                    self.stats.exec_seconds += exec_s
+                    exec_pool = self._exec_costs.setdefault(path, [0, 0.0])
+                    exec_pool[0] += b - a
+                    exec_pool[1] += exec_s
                 journal_chunk(index, y, authoritative=True)
         finally:
             # On abort the remaining submissions are moot; don't leave the
@@ -274,7 +314,7 @@ class MeasurementScheduler:
 
     def _gather(
         self, submit: Callable, label: str, sub, future, index: int
-    ) -> np.ndarray:
+    ) -> tuple[np.ndarray, float | None]:
         attempt = 0
         while True:
             # A resubmission lands at the back of the pool's queue, behind
@@ -286,12 +326,13 @@ class MeasurementScheduler:
             if timeout is not None and attempt > 0:
                 timeout = timeout * (1 + max(0, self.stats.in_flight))
             try:
-                y = np.asarray(future.result(timeout=timeout), dtype=np.float64)
+                y, exec_s = self._split_result(future.result(timeout=timeout))
+                y = np.asarray(y, dtype=np.float64)
                 if y.shape != (len(sub),):
                     raise ValueError(
                         f"executor returned shape {y.shape} for a {len(sub)}-row chunk"
                     )
-                return y
+                return y, exec_s
             except Exception as exc:  # TimeoutError included; KeyboardInterrupt not
                 attempt += 1
                 if attempt > self.max_retries:

@@ -33,6 +33,9 @@ class RunStats:
     failures: int = 0
     #: wall-clock seconds spent inside scheduler dispatch+gather
     measure_seconds: float = 0.0
+    #: executor-side seconds spent inside platform measurement calls (summed
+    #: across workers; reported per chunk by the worker that executed it)
+    exec_seconds: float = 0.0
     started_at: float = dataclasses.field(default_factory=time.perf_counter)
 
     def elapsed(self) -> float:
@@ -53,6 +56,7 @@ class RunStats:
             "retries": self.retries,
             "failures": self.failures,
             "measure_seconds": self.measure_seconds,
+            "exec_seconds": self.exec_seconds,
             "elapsed_s": self.elapsed(),
             "throughput_cfg_s": self.throughput(),
         }

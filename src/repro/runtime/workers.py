@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import importlib
 import multiprocessing
+import time
 from concurrent.futures import Future, ProcessPoolExecutor
 
 import numpy as np
@@ -53,15 +54,28 @@ def _init_worker(spec) -> None:
         _WORKER_PLATFORM = registry.get_platform(name, **dict(kwargs))
 
 
-def _measure_chunk(layer_type: str, params: tuple, values: np.ndarray) -> np.ndarray:
-    """Worker-side entry point: measure one chunk on the per-process platform."""
+def _measure_chunk(
+    layer_type: str, params: tuple, values: np.ndarray
+) -> tuple[np.ndarray, float]:
+    """Worker-side entry point: measure one chunk on the per-process platform.
+
+    Returns ``(times, exec_seconds)`` — the second element is the chunk's
+    execution time measured *worker-side*, around the platform call only.
+    Unlike the scheduler's dispatch-loop wall clock it contains no IPC,
+    pickling or queue wait, so the scheduler's adaptive chunk sizing gets a
+    clean per-item cost signal (see ``effective_chunk_size``).
+    """
     batch = ConfigBatch(params=tuple(params), values=np.asarray(values, dtype=np.int64))
-    return np.asarray(_WORKER_PLATFORM.measure_batch(layer_type, batch), dtype=np.float64)
+    t0 = time.perf_counter()
+    y = np.asarray(_WORKER_PLATFORM.measure_batch(layer_type, batch), dtype=np.float64)
+    return y, time.perf_counter() - t0
 
 
-def _measure_block_chunk(batch: BlockBatch) -> np.ndarray:
+def _measure_block_chunk(batch: BlockBatch) -> tuple[np.ndarray, float]:
     """Worker-side entry point for one block chunk (BlockBatch pickles whole)."""
-    return np.asarray(_WORKER_PLATFORM.measure_block_batch(batch), dtype=np.float64)
+    t0 = time.perf_counter()
+    y = np.asarray(_WORKER_PLATFORM.measure_block_batch(batch), dtype=np.float64)
+    return y, time.perf_counter() - t0
 
 
 class SerialExecutor:
@@ -79,9 +93,11 @@ class SerialExecutor:
     def submit(self, layer_type: str, batch: ConfigBatch) -> Future:
         future: Future = Future()
         try:
-            future.set_result(
-                np.asarray(self.platform.measure_batch(layer_type, batch), dtype=np.float64)
+            t0 = time.perf_counter()
+            y = np.asarray(
+                self.platform.measure_batch(layer_type, batch), dtype=np.float64
             )
+            future.set_result((y, time.perf_counter() - t0))
         except Exception as exc:
             future.set_exception(exc)
         return future
@@ -89,9 +105,9 @@ class SerialExecutor:
     def submit_blocks(self, batch: BlockBatch) -> Future:
         future: Future = Future()
         try:
-            future.set_result(
-                np.asarray(self.platform.measure_block_batch(batch), dtype=np.float64)
-            )
+            t0 = time.perf_counter()
+            y = np.asarray(self.platform.measure_block_batch(batch), dtype=np.float64)
+            future.set_result((y, time.perf_counter() - t0))
         except Exception as exc:
             future.set_exception(exc)
         return future

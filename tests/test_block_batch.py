@@ -297,6 +297,56 @@ class TestBlockBatchStructure:
         )
         assert merged.to_blocks() == a + b
 
+    def test_concat_matches_block_object_round_trip(self):
+        """Columnar concat vs. rebuilding through Block objects: identical.
+
+        ``concat`` merges the ragged tables directly (no ``to_blocks`` /
+        ``from_blocks`` round trip), so every derived field — group layout,
+        row indices, memoized fingerprints — must come out exactly as the
+        reference construction produces them.
+        """
+        batches = [
+            BlockBatch.from_blocks(_dense_blocks(5, 7)),
+            BlockBatch.from_blocks(_toy_blocks(6, 8)),
+            BlockBatch.from_blocks([]),
+            BlockBatch.from_blocks(_dense_blocks(3, 9)),
+            BlockBatch.from_blocks(_ultratrail_blocks(4, 10)),
+        ]
+        reference = BlockBatch.from_blocks(
+            [blk for bb in batches for blk in bb.to_blocks()]
+        )
+        merged = BlockBatch.concat(batches)
+        assert merged.to_blocks() == reference.to_blocks()
+        assert merged.kinds == reference.kinds
+        assert np.array_equal(merged.block_id, reference.block_id)
+        assert np.array_equal(merged.group_of, reference.group_of)
+        assert np.array_equal(merged.row_of, reference.row_of)
+        assert np.array_equal(merged.repeat, reference.repeat)
+        assert np.array_equal(merged.collective_bytes, reference.collective_bytes)
+        assert merged.group_types == reference.group_types
+        assert len(merged.group_configs) == len(reference.group_configs)
+        for g_m, g_r in zip(merged.group_configs, reference.group_configs):
+            assert g_m.params == g_r.params
+            assert np.array_equal(g_m.values, g_r.values)
+        assert merged.fingerprints() == reference.fingerprints()
+
+    def test_concat_stitches_memoized_fingerprints(self):
+        parts = [
+            BlockBatch.from_blocks(_dense_blocks(4, 11)),
+            BlockBatch.from_blocks(_toy_blocks(3, 12)),
+        ]
+        expected = [fp for bb in parts for fp in bb.fingerprints()]  # memoize
+        merged = BlockBatch.concat(parts)
+        assert merged._fingerprints is not None  # stitched, not recomputed
+        assert merged.fingerprints() == expected
+
+    def test_concat_single_and_empty_inputs(self):
+        one = BlockBatch.from_blocks(_toy_blocks(4, 13))
+        assert BlockBatch.concat([one]) is one
+        empty = BlockBatch.concat([])
+        assert len(empty) == 0 and empty.to_blocks() == []
+        assert BlockBatch.concat([empty, one]).to_blocks() == one.to_blocks()
+
     def test_dedup_first_occurrence(self):
         base = _dense_blocks(6, 9)
         # duplicates (same measurement) differing only in kind/repeat collapse

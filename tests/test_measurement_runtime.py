@@ -622,3 +622,149 @@ class TestSamplingCurveFeatureMemo:
         metrics = est.evaluate(campaign.platform, test)
         assert curve[-1]["mape"] == metrics["mape"]
         assert curve[-1]["rmspe"] == metrics["rmspe"]
+
+
+# ------------------------------------------------------------- journal compact
+class TestJournalCompaction:
+    def _populate(self, path) -> MeasurementJournal:
+        journal = MeasurementJournal(str(path))
+        b1 = ConfigBatch.from_dicts([{"a": 1, "b": 2}, {"a": 3, "b": 4}])
+        # same configs journaled again under reversed param order + a retry
+        # that superseded {a:1,b:2} with a different final value
+        b2 = ConfigBatch(
+            params=("b", "a"), values=np.array([[2, 1], [6, 5]], dtype=np.int64)
+        )
+        journal.append_chunk("p", "toy", b1, np.array([1.0, 2.0]))
+        journal.append_chunk("p", "toy", b2, np.array([1.5, 3.0]))
+        journal.append_chunk("p", "toy", b1, np.array([1.75, 2.0]))
+        from repro.core.batch import BlockBatch
+        from repro.core.blocks import Block
+
+        blocks = BlockBatch.from_blocks(
+            [
+                Block(kind="k", layers=(("toy", {"a": 2, "b": 2}),)),
+                Block(kind="k", layers=(("toy", {"a": 4, "b": 4}),)),
+            ]
+        )
+        journal.append_block_chunk("p", blocks, np.array([0.1, 0.2]))
+        journal.append_block_chunk("p", blocks.take(np.array([0])), np.array([0.15]))
+        journal.close()
+        return journal
+
+    def test_compact_preserves_replay_state_bitwise(self, tmp_path):
+        journal = self._populate(tmp_path / "j.jsonl")
+        before = MeasurementCache()
+        MeasurementJournal(journal.path).replay_into(before)
+        stats = MeasurementJournal(journal.path).compact()
+        after = MeasurementCache()
+        replay = MeasurementJournal(journal.path).replay_into(after)
+        assert stats["records_in"] == 5 and stats["records_out"] == 3
+        assert stats["rows_in"] == 9 and stats["rows_out"] == 5
+        assert stats["bytes_out"] < stats["bytes_in"]
+        # last-writer-wins values survive under first-occurrence keys
+        assert after.lookup("p", "toy", {"a": 1, "b": 2}) == 1.75
+        assert after.lookup("p", "toy", {"a": 3, "b": 4}) == 2.0
+        assert after.lookup("p", "toy", {"a": 5, "b": 6}) == 3.0
+        assert before._configs == after._configs if hasattr(before, "_configs") else True
+        assert replay["rows"] == stats["rows_out"]
+
+    def test_compact_is_idempotent(self, tmp_path):
+        journal = self._populate(tmp_path / "j.jsonl")
+        first = MeasurementJournal(journal.path).compact()
+        second = MeasurementJournal(journal.path).compact()
+        assert second["records_out"] == first["records_out"]
+        assert second["rows_out"] == first["rows_out"]
+        assert second["bytes_out"] == first["bytes_out"]
+
+    def test_compact_missing_file_is_a_no_op(self, tmp_path):
+        stats = MeasurementJournal(str(tmp_path / "absent.jsonl")).compact()
+        assert stats["records_in"] == 0 and stats["records_out"] == 0
+
+    def test_hub_gc_drops_superseded_artifacts_keeps_latest(self, tmp_path):
+        from repro.api import EstimatorHub, PerfOracle
+        from repro.checkpoint.manager import journal_path
+
+        hub = EstimatorHub(str(tmp_path), keep=4)
+        campaign = Campaign(_spec())
+        oracle = campaign.run()
+        for _ in range(3):
+            oracle.save(hub, "stepped_sim")
+        slot = os.path.join(str(tmp_path), "stepped_sim", "toy")
+        os.makedirs(os.path.join(slot, "step_000000042.tmp"))
+        journal = MeasurementJournal(journal_path(str(tmp_path)))
+        batch = ConfigBatch.from_dicts([{"a": 1, "b": 1}])
+        journal.append_chunk("stepped_sim", "toy", batch, np.array([1e-6]))
+        journal.append_chunk("stepped_sim", "toy", batch, np.array([2e-6]))
+        journal.close()
+
+        ref = oracle.predict("toy", [{"a": 7, "b": 3}])
+        out = hub.gc(keep=1)
+        assert out["steps_removed"] == 2 and out["tmp_removed"] == 1
+        assert out["journal"]["records_out"] == 1
+        assert sorted(os.listdir(slot)) == ["step_000000003"]
+        reloaded = PerfOracle.load(hub, "stepped_sim")
+        assert np.array_equal(reloaded.predict("toy", [{"a": 7, "b": 3}]), ref)
+
+
+# --------------------------------------------------------- executor-side costs
+class TestExecutorSideCostTimer:
+    def test_serial_executor_reports_exec_seconds(self):
+        scheduler = MeasurementScheduler(SerialExecutor(SteppedSimPlatform()))
+        batch = ConfigBatch.from_columns(
+            {"a": np.arange(1, 33), "b": (np.arange(1, 33) % 32) + 1}
+        )
+        scheduler.measure_batch("stepped_sim", "toy", batch)
+        items, spent = scheduler._exec_costs["configs"]
+        assert items == 32 and spent > 0.0
+        assert scheduler.stats.exec_seconds == spent
+        assert scheduler.stats.snapshot()["exec_seconds"] == spent
+        # exec time excludes dispatch overhead, so it never exceeds wall
+        assert spent <= scheduler._path_costs["configs"][1]
+
+    def test_exec_costs_preferred_over_wall_costs(self):
+        scheduler = MeasurementScheduler(SerialExecutor(SteppedSimPlatform()))
+        scheduler._path_costs["configs"] = [10, 100.0]  # wall says 1 chunk=0
+        scheduler._exec_costs["configs"] = [100, 1.0]  # exec says 10 ms/item
+        assert scheduler.effective_chunk_size("configs") == 100
+        # no exec data for blocks: falls back to the wall pool untouched
+        scheduler._path_costs["blocks"] = [10, 20.0]
+        assert scheduler.effective_chunk_size("blocks") == 1
+
+    def test_bare_array_results_still_accepted(self):
+        """Third-party executors may return arrays without a timing tuple."""
+
+        class BareExecutor(SerialExecutor):
+            def submit(self, layer_type, batch):
+                future = Future()
+                future.set_result(
+                    np.asarray(
+                        self.platform.measure_batch(layer_type, batch),
+                        dtype=np.float64,
+                    )
+                )
+                return future
+
+        platform = SteppedSimPlatform()
+        batch = ConfigBatch.from_columns(
+            {"a": np.arange(1, 17), "b": (np.arange(1, 17) % 32) + 1}
+        )
+        scheduler = MeasurementScheduler(BareExecutor(platform))
+        y = scheduler.measure_batch("stepped_sim", "toy", batch)
+        assert np.array_equal(y, platform.measure_batch("toy", batch))
+        assert scheduler._exec_costs["configs"] == [0, 0.0]
+        assert scheduler.stats.exec_seconds == 0.0
+
+    def test_worker_pool_reports_exec_seconds_across_processes(self):
+        platform = SteppedSimPlatform(delay_s=0.001)
+        batch = ConfigBatch.from_columns(
+            {"a": np.arange(1, 17), "b": (np.arange(1, 17) % 32) + 1}
+        )
+        pool = WorkerPool(platform.spawn_spec(), workers=2)
+        try:
+            scheduler = MeasurementScheduler(pool, chunk_size=8)
+            y = scheduler.measure_batch("stepped_sim", "toy", batch)
+        finally:
+            pool.close()
+        assert np.array_equal(y, platform.measure_batch("toy", batch))
+        items, spent = scheduler._exec_costs["configs"]
+        assert items == 16 and spent >= 16 * 0.001
