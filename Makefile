@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench bench-engine bench-runtime bench-forest bench-blocks bench-serve serve-smoke quickstart
+.PHONY: test bench-smoke bench bench-engine bench-runtime bench-forest bench-blocks bench-serve bench-predict serve-smoke quickstart
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -23,6 +23,9 @@ bench-blocks:
 
 bench-serve:
 	$(PYTHON) -m benchmarks.bench_serve
+
+bench-predict:
+	$(PYTHON) -m benchmarks.bench_predict
 
 serve-smoke:
 	$(PYTHON) -m benchmarks.serve_smoke

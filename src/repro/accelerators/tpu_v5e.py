@@ -307,6 +307,16 @@ class TPUv5eSim(Platform):
         return t * self._noise_factor(layer_type, cfg)
 
     def measure_batch(self, layer_type: str, batch: ConfigBatch) -> np.ndarray:
+        if self.noise <= 0:
+            # Jitted kernel when the jax predict backend is active (env or a
+            # ``predict_backend`` attribute); bitwise-identical, see
+            # repro.accelerators.jax_kernels.  Noisy mode stays numpy: the
+            # per-config hash seeding is inherently scalar.
+            from repro.accelerators import jax_kernels
+
+            t = jax_kernels.tpu_measure_batch(self, layer_type, batch)
+            if t is not None:
+                return t
         flop_s, mem_s = self._terms_batch(layer_type, batch)
         t = np.maximum(flop_s, mem_s) + self.chip.launch_overhead_s
         if self.noise > 0:

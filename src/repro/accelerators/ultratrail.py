@@ -79,6 +79,11 @@ class UltraTrailSim(Platform):
     def measure_batch(self, layer_type: str, batch: ConfigBatch) -> np.ndarray:
         """Columnar cycle model, bitwise-identical to looping ``measure``."""
         assert layer_type == "conv1d"
+        from repro.accelerators import jax_kernels
+
+        t = jax_kernels.ultratrail_measure_batch(self, layer_type, batch)
+        if t is not None:
+            return t
         c_tiles = -(-batch.column("C") // self.ARRAY)
         k_tiles = -(-batch.column("K") // self.ARRAY)
         w_out = (

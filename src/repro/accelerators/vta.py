@@ -94,6 +94,11 @@ class VTASim(Platform):
 
     def measure_batch(self, layer_type: str, batch: ConfigBatch) -> np.ndarray:
         """Columnar cycle model, bitwise-identical to looping ``measure``."""
+        from repro.accelerators import jax_kernels
+
+        t = jax_kernels.vta_measure_batch(self, layer_type, batch)
+        if t is not None:
+            return t
         if layer_type == "conv2d":
             pad = batch.get("pad", 1)
             s = batch.get("s", 1)

@@ -43,20 +43,35 @@ class PerfOracle:
     #: oracle (measured/cached/replayed counts, throughput); None when the
     #: campaign ran without a measurement runtime or the oracle was reloaded.
     run_stats: Mapping[str, float] | None = None
+    #: default predict backend for this oracle ("numpy" | "jax" | "auto");
+    #: None defers to REPRO_PREDICT_BACKEND (see repro.core.jax_predict).
+    #: A runtime knob, not part of the persisted estimator format.
+    predict_backend: str | None = None
 
     # ------------------------------------------------------------ single layer
     def layer_types(self) -> tuple[str, ...]:
         return tuple(self.estimators)
 
     def predict(
-        self, layer_type: str, configs: Sequence[Config] | ConfigBatch
+        self,
+        layer_type: str,
+        configs: Sequence[Config] | ConfigBatch,
+        backend: str | None = None,
     ) -> np.ndarray:
         """Batched Eq. 7/8 prediction for one layer type.
 
         Accepts dict lists or a :class:`ConfigBatch`; either way the snap,
         feature build and forest traversal run columnarly end to end.
+
+        ``backend`` (or the oracle's ``predict_backend`` default) selects the
+        traversal engine; layer predictions are bitwise-identical across
+        backends.  Only real :class:`LayerEstimator` instances see the
+        parameter — duck-typed estimator stubs are called as before.
         """
         est = self.estimators[layer_type]
+        b = backend if backend is not None else self.predict_backend
+        if isinstance(est, LayerEstimator):
+            return np.asarray(est.predict(configs, backend=b), dtype=np.float64)
         if hasattr(est, "predict"):
             return np.asarray(est.predict(configs), dtype=np.float64)
         # Minimal estimator stubs (tests, analytical models) may expose only
@@ -69,7 +84,9 @@ class PerfOracle:
         return float(self.predict(layer_type, [cfg])[0])
 
     def predict_many(
-        self, items: Sequence[tuple[str, Sequence[Config] | ConfigBatch]]
+        self,
+        items: Sequence[tuple[str, Sequence[Config] | ConfigBatch]],
+        backend: str | None = None,
     ) -> list[np.ndarray]:
         """Batch-entry hook for coalesced serving: many ``(layer_type, configs)``
         requests through **one** forest pass per ``(layer_type, params)`` group.
@@ -97,7 +114,7 @@ class PerfOracle:
         out: list[np.ndarray | None] = [None] * len(items)
         for (lt, _params), idxs in groups.items():
             merged = ConfigBatch.concat([items[i][1] for i in idxs])
-            y = self.predict(lt, merged)
+            y = self.predict(lt, merged, backend=backend)
             a = 0
             for i in idxs:
                 n = len(items[i][1])
@@ -113,7 +130,9 @@ class PerfOracle:
         return {"mape": mape(y_true, y_pred), "rmspe": rmspe(y_true, y_pred)}
 
     # ------------------------------------------------------------ whole network
-    def layer_times(self, blocks: Sequence[Block]) -> list[list[float]]:
+    def layer_times(
+        self, blocks: Sequence[Block], backend: str | None = None
+    ) -> list[list[float]]:
         """Per-block per-layer times via one batched predict per layer type.
 
         Public building block for whole-network combination: callers that
@@ -140,10 +159,10 @@ class PerfOracle:
                 configs: Sequence[Config] | ConfigBatch = ConfigBatch.from_dicts(cfgs)
             except ValueError:
                 configs = cfgs  # heterogeneous keys / non-integer values
-            preds[lt] = self.predict(lt, configs)
+            preds[lt] = self.predict(lt, configs, backend=backend)
         return [[float(preds[lt][i]) for lt, i in block_slots] for block_slots in slots]
 
-    def layer_time_sums(self, batch) -> np.ndarray:
+    def layer_time_sums(self, batch, backend: str | None = None) -> np.ndarray:
         """Per-block summed layer estimates for a whole :class:`BlockBatch`.
 
         The columnar-native sibling of :meth:`layer_times` for consumers that
@@ -151,7 +170,9 @@ class PerfOracle:
         batched ``predict`` per layer group, then a ``bincount`` left fold
         per block — bitwise-identical to summing :meth:`layer_times` rows.
         """
-        return batch.sum_by_block(batch.scatter_groups(self.predict))
+        return batch.sum_by_block(
+            batch.scatter_groups(lambda lt, cfgs: self.predict(lt, cfgs, backend=backend))
+        )
 
     def _combine(self, block: Block, times: Sequence[float]) -> float:
         if block.kind in self.overlap_kinds:
@@ -169,19 +190,115 @@ class PerfOracle:
         """Eq. 12 with one batched forest pass per layer type."""
         return float(self.predict_networks([blocks])[0])
 
-    def predict_networks(self, networks: Sequence[Sequence[Block]]) -> np.ndarray:
+    def predict_network_batch(
+        self,
+        batch,
+        net_id: np.ndarray | None = None,
+        n_nets: int | None = None,
+        backend: str | None = None,
+    ) -> np.ndarray:
+        """Eq. 9-12 over a :class:`~repro.core.batch.BlockBatch`, columnarly.
+
+        ``net_id`` assigns each block to a network (default: one block per
+        network); returns the ``(n_nets,)`` step-time estimates.  The whole
+        combination is array arithmetic mirroring :meth:`_combine` operation
+        for operation — per-block ``bincount`` sums / ``maximum.at`` maxes
+        accumulate in layer-table order, so results are bitwise identical to
+        the scalar block loop.  Under the jax backend the forest traversal
+        *and* this combination compile as one call
+        (:func:`repro.core.jax_predict.predict_network_batch_jax`); that puts
+        the log-target ``exp`` inside the compiled graph, so jax network
+        results carry an rtol≈1e-12 tolerance when any estimator is
+        log-target (bitwise otherwise) — see the module parity contract.
+        """
+        n_blocks = len(batch)
+        if net_id is None:
+            net_id = np.arange(n_blocks, dtype=np.int64)
+            if n_nets is None:
+                n_nets = n_blocks
+        net_id = np.asarray(net_id, dtype=np.int64)
+        if n_nets is None:
+            n_nets = int(net_id.max()) + 1 if net_id.size else 0
+        b = backend if backend is not None else self.predict_backend
+        counts = batch.layer_counts()
+        overlap = np.array([k in self.overlap_kinds for k in batch.kinds], dtype=bool)
+        if bool(np.any(overlap & (counts == 0))):
+            # Scalar semantics: _combine runs max() on an empty sequence.
+            raise ValueError(
+                "overlap block with zero layers: Eq. 9 needs at least one layer"
+            )
+        if n_blocks:
+            from repro.core import jax_predict
+
+            if jax_predict.resolve_backend(b) == "jax":
+                y = jax_predict.predict_network_batch_jax(self, batch, net_id, n_nets)
+                if y is not None:
+                    return y
+        times = batch.scatter_groups(
+            lambda lt, cfgs: self.predict(lt, cfgs, backend=b)
+        )
+        sums = batch.sum_by_block(times)
+        t = sums - self.launch_overhead_s * np.maximum(0, counts - 1)
+        fused = np.zeros(n_blocks, dtype=bool)
+        w = np.zeros(n_blocks, dtype=np.float64)
+        c = np.zeros(n_blocks, dtype=np.float64)
+        for i, kind in enumerate(batch.kinds):
+            fm = self.fusing.get(kind)
+            if fm is not None and kind not in self.overlap_kinds:
+                fused[i] = True
+                w[i] = fm.w
+                c[i] = fm.c
+        if fused.any():
+            from repro.core.blocks import block_ops_batch
+
+            t = np.where(fused, t - (block_ops_batch(batch) * w + c), t)
+        if overlap.any():
+            maxs = np.full(n_blocks, -np.inf)
+            np.maximum.at(maxs, batch.block_id, times)
+            t = np.where(overlap, maxs, t)
+        t = np.maximum(t, np.where(counts > 0, self.launch_overhead_s, 0.0))
+        return np.bincount(
+            net_id, weights=t * batch.repeat, minlength=int(n_nets)
+        ).astype(np.float64, copy=False)
+
+    def predict_networks(
+        self, networks: Sequence[Sequence[Block]], backend: str | None = None
+    ) -> np.ndarray:
         """Eq. 12 over many networks, one forest pass per layer type *total*.
 
-        All networks' blocks share a single :meth:`layer_times` call, so
-        estimating 24 candidate meshes with 3 layer types costs 3 forest
-        traversal batches, not 72 — the per-network combination (Eq. 9-12) is
-        plain scalar arithmetic.  Forest predictions are row-independent, so
+        All networks' blocks flatten into one :class:`BlockBatch` and ride
+        :meth:`predict_network_batch` (columnar, jit-compiled under the jax
+        backend), so estimating 24 candidate meshes with 3 layer types costs
+        3 forest traversal batches, not 72.  Forest predictions are
+        row-independent and the combination accumulates in block order, so
         every network's estimate is bitwise identical to a standalone
-        ``predict_network`` call.
+        ``predict_network`` call (on the numpy backend; see
+        :meth:`predict_network_batch` for the jax tolerance).  Networks whose
+        configs cannot columnarise (ragged keys, non-integer values) fall
+        back to the per-row combination with identical results.
         """
+        from repro.core.batch import BlockBatch
+
         networks = [list(net) for net in networks]
         flat = [b for net in networks for b in net]
-        all_times = self.layer_times(flat)
+        if not flat:
+            return np.zeros(len(networks), dtype=np.float64)
+        try:
+            batch = BlockBatch.from_blocks(flat)
+        except (ValueError, TypeError):
+            return self._predict_networks_rows(networks, backend)
+        sizes = [len(net) for net in networks]
+        net_id = np.repeat(np.arange(len(networks), dtype=np.int64), sizes)
+        return self.predict_network_batch(
+            batch, net_id, len(networks), backend=backend
+        )
+
+    def _predict_networks_rows(
+        self, networks: Sequence[list[Block]], backend: str | None = None
+    ) -> np.ndarray:
+        """Per-row Eq. 9-12 fallback for networks that cannot columnarise."""
+        flat = [b for net in networks for b in net]
+        all_times = self.layer_times(flat, backend=backend)
         out = np.empty(len(networks), dtype=np.float64)
         i = 0
         for j, net in enumerate(networks):

@@ -20,7 +20,7 @@ import dataclasses
 from typing import Protocol, Sequence
 
 from repro.core.blocks import Block
-from repro.core.network import decompose
+from repro.core.network import decompose, decompose_batch
 from repro.models.config import InputShape, ModelConfig
 
 
@@ -68,6 +68,15 @@ def candidate_blocks(
     return decompose(cfg, micro_shape, cand.dp, cand.tp)
 
 
+def candidate_block_batch(cfg: ModelConfig, shape: InputShape, cand: Candidate):
+    """Columnar :func:`candidate_blocks`: one :class:`BlockBatch` per candidate,
+    built without materialising ``Block`` objects."""
+    micro_shape = dataclasses.replace(
+        shape, global_batch=max(1, shape.global_batch // cand.microbatches)
+    )
+    return decompose_batch(cfg, micro_shape, cand.dp, cand.tp)
+
+
 def estimate_candidate(
     estimator: NetworkPredictor,
     cfg: ModelConfig,
@@ -105,19 +114,34 @@ def autotune(
             continue
         feasible.append(c)
     scores = [float("inf")] * len(feasible)
-    networks: list[list[Block]] = []
-    slot_of: list[int] = []
-    for k, c in enumerate(feasible):
-        if _microbatch_infeasible(shape, c):
-            continue
-        networks.append(candidate_blocks(cfg, shape, c))
-        slot_of.append(k)
-    if networks:
+    chosen = [
+        (k, c)
+        for k, c in enumerate(feasible)
+        if not _microbatch_infeasible(shape, c)
+    ]
+    if chosen:
+        predict_batch = getattr(estimator, "predict_network_batch", None)
         predict_many = getattr(estimator, "predict_networks", None)
-        if predict_many is not None:
-            preds = predict_many(networks)
+        if predict_batch is not None:
+            # Columnar-native: decompose each candidate straight into a
+            # BlockBatch (no Block objects), merge, and score in one call.
+            import numpy as np
+
+            from repro.core.batch import BlockBatch
+
+            batches = [candidate_block_batch(cfg, shape, c) for _, c in chosen]
+            merged = BlockBatch.concat(batches)
+            net_id = np.repeat(
+                np.arange(len(batches)), [len(b) for b in batches]
+            )
+            preds = predict_batch(merged, net_id=net_id, n_nets=len(batches))
+        elif predict_many is not None:
+            preds = predict_many([candidate_blocks(cfg, shape, c) for _, c in chosen])
         else:
-            preds = [estimator.predict_network(net) for net in networks]
-        for k, p in zip(slot_of, preds):
-            scores[k] = float(p) * feasible[k].microbatches
+            preds = [
+                estimator.predict_network(candidate_blocks(cfg, shape, c))
+                for _, c in chosen
+            ]
+        for (k, c), p in zip(chosen, preds):
+            scores[k] = float(p) * c.microbatches
     return sorted(zip(feasible, scores), key=lambda x: x[1])

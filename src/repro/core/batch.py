@@ -195,6 +195,88 @@ class ConfigBatch:
         return self.take(first[order]), first[order], rank[inv]
 
 
+class BlockBatchBuilder:
+    """Incremental columnar constructor for :class:`BlockBatch`.
+
+    The producer-side twin of :meth:`BlockBatch.from_blocks` for callers that
+    never materialise ``Block`` objects (columnar-native ``decompose``):
+    ``add`` appends one block straight into the per-group columns, keyed on
+    the same ``(layer_type, insertion-order key tuple)`` group identity, so
+    ``build()`` is field-for-field identical to
+    ``BlockBatch.from_blocks(blocks)`` over the same walk (asserted in
+    tests/test_jax_predict.py).  Raises the same ``ValueError`` on
+    non-integer config values.
+    """
+
+    def __init__(self) -> None:
+        self._kinds: list[str] = []
+        self._coll: list[float] = []
+        self._rep: list[float] = []
+        self._block_id: list[int] = []
+        self._group_of: list[int] = []
+        self._row_of: list[int] = []
+        self._key_to_group: dict[tuple, int] = {}
+        self._group_types: list[str] = []
+        self._group_params: list[tuple[str, ...]] = []
+        self._group_rows: list[list[list]] = []
+
+    def add(
+        self,
+        kind: str,
+        layers: Sequence[tuple[str, Config]],
+        collective_bytes: float = 0.0,
+        repeat: float = 1.0,
+    ) -> None:
+        bid = len(self._kinds)
+        self._kinds.append(str(kind))
+        self._coll.append(float(collective_bytes))
+        self._rep.append(float(repeat))
+        for lt, cfg in layers:
+            key = (lt, tuple(cfg))
+            g = self._key_to_group.get(key)
+            if g is None:
+                g = len(self._group_types)
+                self._key_to_group[key] = g
+                self._group_types.append(lt)
+                self._group_params.append(key[1])
+                self._group_rows.append([])
+            rows = self._group_rows[g]
+            self._block_id.append(bid)
+            self._group_of.append(g)
+            self._row_of.append(len(rows))
+            rows.append(list(cfg.values()))
+
+    def build(self) -> "BlockBatch":
+        configs = []
+        for params, rows in zip(self._group_params, self._group_rows):
+            arr = np.asarray(rows)
+            if not np.issubdtype(arr.dtype, np.number):
+                raise ValueError(f"non-numeric config value in layer params {params}")
+            if not np.issubdtype(arr.dtype, np.integer):
+                cast = arr.astype(np.int64)
+                if not np.array_equal(cast, arr):
+                    raise ValueError(
+                        f"non-integer config value in layer params {params}"
+                    )
+                arr = cast
+            configs.append(
+                ConfigBatch(
+                    params=params,
+                    values=arr.astype(np.int64).reshape(len(rows), len(params)),
+                )
+            )
+        return BlockBatch(
+            kinds=tuple(self._kinds),
+            collective_bytes=np.asarray(self._coll, dtype=np.float64),
+            repeat=np.asarray(self._rep, dtype=np.float64),
+            block_id=np.asarray(self._block_id, dtype=np.int64),
+            group_of=np.asarray(self._group_of, dtype=np.int64),
+            row_of=np.asarray(self._row_of, dtype=np.int64),
+            group_types=tuple(self._group_types),
+            group_configs=tuple(configs),
+        )
+
+
 @dataclasses.dataclass(frozen=True)
 class BlockBatch:
     """``n`` multi-layer building blocks, stored as a ragged columnar table.

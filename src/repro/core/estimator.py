@@ -79,19 +79,34 @@ class LayerEstimator:
             return base
         return np.concatenate([base, extra], axis=1)
 
-    def predict_features(self, X: np.ndarray) -> np.ndarray:
+    def predict_features(
+        self, X: np.ndarray, backend: str | None = None
+    ) -> np.ndarray:
         """Predict from a pre-built (already snapped) feature matrix.
 
         Lets callers that evaluate one test set against many trained forests
         (``Campaign.sampling_curve``) reuse a memoized feature matrix instead
         of re-snapping and re-featurizing per evaluation.
+
+        ``backend`` selects the traversal engine (numpy / jax, see
+        :mod:`repro.core.jax_predict`); the log-target inversion stays
+        ``np.exp`` on both, so predictions are bitwise-identical across
+        backends.  ``None`` defers to the environment default — and is not
+        forwarded, so duck-typed forest stubs without the parameter keep
+        working.
         """
-        y = self.forest.predict(np.asarray(X, dtype=np.float64))
+        X = np.asarray(X, dtype=np.float64)
+        if backend is None:
+            y = self.forest.predict(X)
+        else:
+            y = self.forest.predict(X, backend=backend)
         return np.exp(y) if self.log_target else y
 
-    def predict(self, configs: Sequence[prs.Config] | ConfigBatch) -> np.ndarray:
+    def predict(
+        self, configs: Sequence[prs.Config] | ConfigBatch, backend: str | None = None
+    ) -> np.ndarray:
         """Eq. 7/8: map to PR, then predict with the forest."""
-        return self.predict_features(self._features(configs, snap=True))
+        return self.predict_features(self._features(configs, snap=True), backend)
 
     def predict_one(self, cfg: prs.Config) -> float:
         return float(self.predict([cfg])[0])

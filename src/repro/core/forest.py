@@ -292,10 +292,19 @@ class RandomForestRegressor:
             self._trees.append(tree)
         return self
 
-    def predict(self, X: np.ndarray) -> np.ndarray:
+    def predict(self, X: np.ndarray, backend: str | None = None) -> np.ndarray:
         X = np.asarray(X, dtype=np.float64)
         if not self._trees:
             raise RuntimeError("fit() before predict()")
+        if X.shape[0]:
+            from repro.core import jax_predict
+
+            # Compiled traversal when the jax backend is active (explicit arg
+            # or REPRO_PREDICT_BACKEND); bitwise-identical to the fold below.
+            if jax_predict.resolve_backend(backend) == "jax":
+                y = jax_predict.forest_predict_raw(self, X)
+                if y is not None:
+                    return y
         per_tree = self._stacked().predict_all(X)
         # Accumulate tree by tree (not np.sum's pairwise order) so the mean is
         # bitwise equal to the historical ``acc += tree.predict(X)`` loop.

@@ -1,0 +1,358 @@
+"""JAX-jitted inference hot path: compiled forest traversal and Eq. 9-12.
+
+The predict path (never the fit path) can run through ``jax.jit``: the stacked
+forest traversal, the four analytical timing models, and the whole-network
+combination are pure int64/float64 array programs.  This module owns the
+backend selection and the compiled kernels for the forest and network paths;
+the platform timing kernels live in :mod:`repro.accelerators.jax_kernels`.
+
+Backend selection
+-----------------
+``resolve_backend(explicit)`` decides per call:
+
+* an explicit argument (``backend=`` on :meth:`PerfOracle.predict` and
+  friends, or ``PerfOracle.predict_backend``) wins;
+* otherwise the ``REPRO_PREDICT_BACKEND`` environment variable
+  (``numpy`` | ``jax`` | ``auto``) decides; unset means ``numpy``;
+* ``jax`` falls back to numpy (with a one-time warning) when jax cannot be
+  imported; ``auto`` means jax-if-available, silently.
+
+Every jax entry point in this repo returns ``None`` when it cannot serve a
+request (jax missing, stub estimators, ragged inputs, noisy platforms) and the
+caller continues on the numpy path — third-party platforms and estimator
+stubs never see the backend at all.
+
+Parity contract (asserted in tests/test_jax_predict.py and in-bench)
+--------------------------------------------------------------------
+All kernels run in float64 via the scoped ``jax.experimental.enable_x64()``
+context (never the global flag: flipping ``jax_enable_x64`` process-wide
+would change the dtype behaviour of unrelated jax code in the same process).
+
+* **Layer predictions are bitwise identical** to numpy.  The compiled
+  traversal replays the numpy descent loop gather-for-gather, accumulates
+  per-tree values in tree order (``lax.fori_loop`` left fold — *not*
+  ``jnp.sum``, whose pairwise order differs), and divides by a *traced*
+  tree-count scalar (XLA strength-reduces division by a compile-time constant
+  into multiplication by its reciprocal, a 1-ulp difference; a traced divisor
+  keeps the true division).  The log-target inversion stays ``np.exp``
+  *outside* the jit, so :meth:`LayerEstimator.predict` is bit-for-bit equal
+  across backends.
+* **Platform timing kernels are bitwise identical**: integer tile padding is
+  exact arithmetic, and every float hardware constant (peak FLOPs,
+  bandwidths, clock rates) is passed as a traced scalar for the same
+  reciprocal reason.
+* **Whole-network predictions** (:func:`predict_network_batch_jax`) compile
+  the traversal *and* the Eq. 9-12 combination as one call, which puts
+  ``jnp.exp`` inside the compiled graph for log-target estimators;
+  ``jnp.exp`` may differ from ``np.exp`` by 1 ulp, so network results carry
+  an rtol≈1e-12 tolerance when any estimator is log-target — and are bitwise
+  when none is.  The serving cache scopes its network keys accordingly
+  (:meth:`repro.serving.server.OracleServer._network_key_scope`).
+
+Shapes, retracing and donation
+------------------------------
+Batch rows are padded to power-of-two buckets (min 64) before entering a
+kernel and sliced back after, so the admission batcher's variable batch sizes
+hit a handful of warm-compiled shapes instead of retracing per request.
+Input buffers are donated (``donate_argnums``); on CPU XLA currently declines
+input-shaped donations and copies instead — the donation is kept for
+device backends and the resulting "donated buffers were not usable" warning
+is suppressed, since the padded copy is ours to give away either way.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import warnings
+
+import numpy as np
+
+_ENV_VAR = "REPRO_PREDICT_BACKEND"
+_BACKENDS = ("numpy", "jax", "auto")
+
+#: rows are padded up to the next power of two, at least this many
+_MIN_BUCKET = 64
+
+_modules_cache: tuple | None = None
+_import_failed = False
+_warned_fallback = False
+
+
+def jax_modules() -> tuple | None:
+    """``(jax, jnp, lax, enable_x64)`` or None when jax cannot be imported.
+
+    The import is deferred so numpy-only deployments (and the CI leg that
+    asserts no eager jax import) never pay for it at module load.
+    """
+    global _modules_cache, _import_failed
+    if _modules_cache is None and not _import_failed:
+        try:
+            import jax
+            import jax.numpy as jnp
+            from jax import lax
+            from jax.experimental import enable_x64
+        except Exception:  # ImportError or backend-init failure: numpy path
+            _import_failed = True
+            return None
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable"
+        )
+        _modules_cache = (jax, jnp, lax, enable_x64)
+    return _modules_cache
+
+
+def jax_available() -> bool:
+    return jax_modules() is not None
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    """Resolve an explicit/env backend request to ``"numpy"`` or ``"jax"``."""
+    global _warned_fallback
+    choice = backend
+    if choice is None:
+        choice = os.environ.get(_ENV_VAR, "").strip().lower() or "numpy"
+    if choice not in _BACKENDS:
+        raise ValueError(
+            f"unknown predict backend {choice!r}; expected one of {_BACKENDS}"
+        )
+    if choice == "numpy":
+        return "numpy"
+    if jax_available():
+        return "jax"
+    if choice == "jax" and not _warned_fallback:
+        warnings.warn(
+            "predict backend 'jax' requested but jax is unavailable; "
+            "falling back to numpy",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+        _warned_fallback = True
+    return "numpy"
+
+
+def bucket_rows(n: int) -> int:
+    """Warm-shape bucket for ``n`` rows: next power of two, at least 64."""
+    if n <= _MIN_BUCKET:
+        return _MIN_BUCKET
+    return 1 << (int(n) - 1).bit_length()
+
+
+# --------------------------------------------------------------- forest kernel
+def _traverse(jnp, lax, feature, threshold, left, right, value, X, n_trees):
+    """Compiled twin of ``_ForestStack.predict_all`` + the per-tree fold.
+
+    Same descent (every (tree, sample) pair advances until its node is a
+    leaf), same accumulation order, and a *traced* divisor — see the module
+    docstring's parity contract.
+    """
+    T = feature.shape[0]
+    n = X.shape[0]
+    rows = jnp.arange(T)[:, None]
+    cols = jnp.arange(n)[None, :]
+
+    def cond(node):
+        return jnp.any(feature[rows, node] >= 0)
+
+    def body(node):
+        feat = feature[rows, node]
+        active = feat >= 0
+        x = X[cols, jnp.where(active, feat, 0)]
+        go_left = x <= threshold[rows, node]
+        nxt = jnp.where(go_left, left[rows, node], right[rows, node])
+        return jnp.where(active, nxt, node)
+
+    node = lax.while_loop(cond, body, jnp.zeros((T, n), dtype=jnp.int32))
+    per_tree = value[rows, node]
+    acc = lax.fori_loop(
+        0, T, lambda i, a: a + per_tree[i], jnp.zeros((n,), per_tree.dtype)
+    )
+    return acc / n_trees
+
+
+@functools.lru_cache(maxsize=1)
+def _forest_fn():
+    jax, jnp, lax, _ = jax_modules()
+
+    def run(feature, threshold, left, right, value, X, n_trees):
+        return _traverse(jnp, lax, feature, threshold, left, right, value, X, n_trees)
+
+    return jax.jit(run, donate_argnums=(5,))
+
+
+class ForestEngine:
+    """Compiled traversal bound to one stacked forest.
+
+    Instances memoize on the ``_ForestStack`` object itself (see
+    :func:`forest_predict_raw`), so the ``RandomForestRegressor._trees``
+    setter's stack invalidation retires the engine automatically on refit.
+    """
+
+    def __init__(self, stack, n_trees: int) -> None:
+        self._arrays = (
+            stack.feature,
+            stack.threshold,
+            stack.left,
+            stack.right,
+            stack.value,
+        )
+        self._n_trees = np.float64(n_trees)
+
+    def predict_raw(self, X: np.ndarray) -> np.ndarray:
+        """Mean-over-trees raw prediction, bitwise equal to the numpy fold."""
+        n, d = X.shape
+        nb = bucket_rows(n)
+        Xp = np.zeros((nb, d), dtype=np.float64)
+        Xp[:n] = X
+        _, _, _, enable_x64 = jax_modules()
+        fn = _forest_fn()
+        with enable_x64():
+            y = fn(*self._arrays, Xp, self._n_trees)
+        return np.asarray(y)[:n]
+
+
+def forest_predict_raw(forest, X: np.ndarray) -> np.ndarray | None:
+    """Jitted ``RandomForestRegressor.predict``; None when jax can't serve it."""
+    if jax_modules() is None:
+        return None
+    stack = forest._stacked()
+    engine = getattr(stack, "_jax_engine", None)
+    if engine is None:
+        engine = ForestEngine(stack, len(forest._trees))
+        stack._jax_engine = engine
+    return engine.predict_raw(np.asarray(X, dtype=np.float64))
+
+
+# -------------------------------------------------------------- network kernel
+@functools.lru_cache(maxsize=None)
+def _network_fn(log_flags: tuple):
+    """One-call Eq. 9-12 kernel for a fixed per-group log-target signature.
+
+    ``log_flags`` decides at trace time which groups exponentiate inside the
+    graph; everything else (positions, combination masks, constants) is
+    traced so shape buckets are the only retrace axis.
+    """
+    jax, jnp, lax, _ = jax_modules()
+
+    def run(
+        groups, Xs, block_seg, counts, overlap, fused, w, c, ops, rep,
+        net_seg, net_dummy, launch,
+    ):
+        n_slots = block_seg.shape[0]  # Lb + 1: padded layer table + dump slot
+        Bb = counts.shape[0]
+        times = jnp.zeros((n_slots,), dtype=jnp.float64)
+        for (feature, threshold, left, right, value, n_trees, pos), X, is_log in zip(
+            groups, Xs, log_flags
+        ):
+            y = _traverse(jnp, lax, feature, threshold, left, right, value, X, n_trees)
+            if is_log:
+                y = jnp.exp(y)
+            times = times.at[pos].set(y)
+        # Eq. 10 first term / Eq. 9: per-block left-fold sum and max.  Padded
+        # layer rows carry segment id Bb (the dump segment, sliced away).
+        sums = jax.ops.segment_sum(times, block_seg, num_segments=Bb + 1)[:Bb]
+        maxs = jax.ops.segment_max(times, block_seg, num_segments=Bb + 1)[:Bb]
+        t = sums - launch * jnp.maximum(0.0, counts - 1.0)
+        t = jnp.where(fused, t - (ops * w + c), t)  # Eq. 10/11
+        t = jnp.where(overlap, maxs, t)  # Eq. 9
+        t = jnp.maximum(t, jnp.where(counts > 0.0, launch, 0.0))
+        # Eq. 12: per-network sum of block time x repeat; padded blocks have
+        # rep == 0 and net segment Nb (the dump segment).
+        return jax.ops.segment_sum(t * rep, net_seg, num_segments=net_dummy.shape[0])
+
+    return jax.jit(run, donate_argnums=(1,))
+
+
+def predict_network_batch_jax(oracle, batch, net_id, n_nets) -> np.ndarray | None:
+    """Compiled Eq. 9-12 over a :class:`BlockBatch`; None = use the numpy path.
+
+    Falls back (returns None) for stub estimators, empty forests, and blocks
+    with zero layers — the numpy path owns those semantics (including the
+    empty-overlap-block ``ValueError``).
+    """
+    if jax_modules() is None:
+        return None
+    n_blocks = len(batch)
+    counts = batch.layer_counts()
+    if n_blocks == 0 or np.any(counts == 0):
+        return None
+    ests = []
+    for lt in batch.group_types:
+        try:
+            est = oracle.estimators[lt]
+        except KeyError:
+            return None  # numpy path raises the canonical KeyError
+        forest = getattr(est, "forest", None)
+        if not hasattr(est, "_features") or forest is None or not getattr(
+            forest, "_trees", None
+        ):
+            return None
+        ests.append(est)
+
+    from repro.core.blocks import block_ops_batch
+
+    L = batch.n_layers
+    Lb = bucket_rows(L)
+    Bb = bucket_rows(n_blocks)
+    net_id = np.asarray(net_id, dtype=np.int64)
+    n_nets = int(n_nets)
+    Nb = bucket_rows(max(1, n_nets))
+
+    groups = []
+    Xs = []
+    log_flags = []
+    for g, (est, cfgs) in enumerate(zip(ests, batch.group_configs)):
+        X = est._features(cfgs, snap=True)
+        ng, d = X.shape
+        nb = bucket_rows(ng)
+        Xp = np.zeros((nb, d), dtype=np.float64)
+        Xp[:ng] = X
+        pos = np.full(nb, Lb, dtype=np.int64)  # pads write the dump slot
+        pos[:ng] = np.flatnonzero(batch.group_of == g)
+        stack = est.forest._stacked()
+        groups.append(
+            (
+                stack.feature,
+                stack.threshold,
+                stack.left,
+                stack.right,
+                stack.value,
+                np.float64(len(est.forest._trees)),
+                pos,
+            )
+        )
+        Xs.append(Xp)
+        log_flags.append(bool(getattr(est, "log_target", False)))
+
+    block_seg = np.full(Lb + 1, Bb, dtype=np.int64)
+    block_seg[:L] = batch.block_id
+    counts_p = np.zeros(Bb, dtype=np.float64)
+    counts_p[:n_blocks] = counts
+    overlap = np.zeros(Bb, dtype=bool)
+    overlap[:n_blocks] = [k in oracle.overlap_kinds for k in batch.kinds]
+    fused = np.zeros(Bb, dtype=bool)
+    w = np.zeros(Bb, dtype=np.float64)
+    c = np.zeros(Bb, dtype=np.float64)
+    for i, kind in enumerate(batch.kinds):
+        fm = oracle.fusing.get(kind)
+        if fm is not None and kind not in oracle.overlap_kinds:
+            fused[i] = True
+            w[i] = fm.w
+            c[i] = fm.c
+    ops = np.zeros(Bb, dtype=np.float64)
+    if fused.any():
+        ops[:n_blocks] = block_ops_batch(batch)
+    rep = np.zeros(Bb, dtype=np.float64)
+    rep[:n_blocks] = batch.repeat
+    net_seg = np.full(Bb, Nb, dtype=np.int64)
+    net_seg[:n_blocks] = net_id
+    net_dummy = np.zeros(Nb + 1, dtype=np.float64)
+
+    _, _, _, enable_x64 = jax_modules()
+    fn = _network_fn(tuple(log_flags))
+    with enable_x64():
+        out = fn(
+            tuple(groups), tuple(Xs), block_seg, counts_p, overlap, fused, w, c,
+            ops, rep, net_seg, net_dummy, np.float64(oracle.launch_overhead_s),
+        )
+    return np.asarray(out)[:n_nets]

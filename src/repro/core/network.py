@@ -31,14 +31,20 @@ def _head_policy(cfg: ModelConfig, tp: int) -> str:
     return "replicated"
 
 
-def decompose(
+def _decompose_plan(
     cfg: ModelConfig,
     shape: InputShape,
     dp: int,
     tp: int,
     train_factor: float = 3.0,
-) -> list[Block]:
-    """Per-device building blocks of one step.  train_factor ~ (fwd+bwd)/fwd."""
+):
+    """Yield ``(kind, layers, collective_bytes, repeat)`` for one step's blocks.
+
+    The single source of truth behind both :func:`decompose` (materialises
+    :class:`Block` objects) and :func:`decompose_batch` (streams straight into
+    a columnar :class:`~repro.core.batch.BlockBatch`), so the two can never
+    drift: same blocks, same order, same fields.
+    """
     is_train = shape.kind == "train"
     is_decode = shape.kind == "decode"
     rep = train_factor if is_train else 1.0
@@ -52,10 +58,9 @@ def decompose(
     kv_loc = cfg.n_kv_heads // tp if policy == "kv_sharded" else cfg.n_kv_heads
     kv_ratio = max(1, h_loc // max(1, kv_loc))
 
-    blocks: list[Block] = []
     coll_act = t_loc * d * 2.0  # one bf16 activation all-reduce payload
 
-    def attn_block() -> Block:
+    def attn_block() -> tuple:
         layers: list[tuple[str, Config]] = [
             ("dense", {"tokens": t_loc, "d_in": d, "d_out": (h_loc + 2 * kv_loc) * hd}),
         ]
@@ -68,16 +73,16 @@ def decompose(
                 ("attention_prefill", {"B": b_loc, "S": s, "H": h_loc, "Dh": hd, "kv_ratio": kv_ratio})
             )
         layers.append(("dense", {"tokens": t_loc, "d_in": h_loc * hd, "d_out": d}))
-        return Block(kind="attn", layers=tuple(layers), collective_bytes=coll_act, repeat=1)
+        return ("attn", tuple(layers), coll_act)
 
-    def mlp_block() -> Block:
+    def mlp_block() -> tuple:
         f_loc = max(1, f // tp)
         n_in = 2 if cfg.mlp == "swiglu" else 1
         layers = [("dense", {"tokens": t_loc, "d_in": d, "d_out": f_loc})] * n_in
         layers.append(("dense", {"tokens": t_loc, "d_in": f_loc, "d_out": d}))
-        return Block(kind="mlp", layers=tuple(layers), collective_bytes=coll_act, repeat=1)
+        return ("mlp", tuple(layers), coll_act)
 
-    def moe_block() -> Block:
+    def moe_block() -> tuple:
         e_loc = max(1, cfg.moe_experts // tp)
         layers = [
             ("dense", {"tokens": t_loc, "d_in": d, "d_out": cfg.moe_experts}),  # router
@@ -92,9 +97,9 @@ def decompose(
                 },
             ),
         ]
-        return Block(kind="moe", layers=tuple(layers), collective_bytes=2 * coll_act, repeat=1)
+        return ("moe", tuple(layers), 2 * coll_act)
 
-    def ssd_block() -> Block:
+    def ssd_block() -> tuple:
         di_loc = max(1, cfg.d_inner // tp)
         h_ssm = max(1, cfg.ssm_heads // tp)
         layers = [
@@ -102,59 +107,55 @@ def decompose(
             ("ssd_scan", {"B": b_loc, "S": s, "H": h_ssm, "P": cfg.ssm_headdim, "N": cfg.ssm_state}),
             ("dense", {"tokens": t_loc, "d_in": di_loc, "d_out": d}),
         ]
-        return Block(kind="ssd", layers=tuple(layers), collective_bytes=coll_act, repeat=1)
+        return ("ssd", tuple(layers), coll_act)
+
+    def body(plan: tuple, n: int) -> tuple:
+        kind, layers, coll = plan
+        return (kind, layers, coll, n * rep)
 
     # ---- embedding ----
-    blocks.append(
-        Block(
-            kind="embed",
-            layers=(("embed", {"tokens": t_loc, "vocab": v, "d_model": d}),),
-            repeat=rep,
-        )
-    )
+    yield ("embed", (("embed", {"tokens": t_loc, "vocab": v, "d_model": d}),), 0.0, rep)
 
     # ---- body ----
-    def rep_block(blk: Block, n: int) -> Block:
-        return Block(kind=blk.kind, layers=blk.layers, collective_bytes=blk.collective_bytes, repeat=n * rep)
-
     if cfg.family in ("dense", "vlm"):
-        blocks += [rep_block(attn_block(), cfg.n_layers), rep_block(mlp_block(), cfg.n_layers)]
+        yield body(attn_block(), cfg.n_layers)
+        yield body(mlp_block(), cfg.n_layers)
     elif cfg.family == "moe":
-        blocks += [rep_block(attn_block(), cfg.n_layers), rep_block(moe_block(), cfg.n_layers)]
+        yield body(attn_block(), cfg.n_layers)
+        yield body(moe_block(), cfg.n_layers)
     elif cfg.family == "ssm":
-        blocks += [rep_block(ssd_block(), cfg.n_layers)]
+        yield body(ssd_block(), cfg.n_layers)
     elif cfg.family == "hybrid":
         n_shared = cfg.n_layers // max(1, cfg.attn_every)
-        blocks += [
-            rep_block(ssd_block(), cfg.n_layers),
-            rep_block(attn_block(), n_shared),
-            rep_block(mlp_block(), n_shared),
-        ]
+        yield body(ssd_block(), cfg.n_layers)
+        yield body(attn_block(), n_shared)
+        yield body(mlp_block(), n_shared)
     elif cfg.family == "audio":
         if not is_decode:
             enc_t = b_loc * cfg.encoder_seq
-            enc_attn = Block(
-                kind="attn",
-                layers=(
+            enc_attn = (
+                "attn",
+                (
                     ("dense", {"tokens": enc_t, "d_in": d, "d_out": (h_loc + 2 * kv_loc) * hd}),
                     ("attention_prefill", {"B": b_loc, "S": cfg.encoder_seq, "H": h_loc, "Dh": hd, "kv_ratio": kv_ratio}),
                     ("dense", {"tokens": enc_t, "d_in": h_loc * hd, "d_out": d}),
                 ),
-                collective_bytes=enc_t * d * 2.0,
+                enc_t * d * 2.0,
             )
-            enc_mlp = Block(
-                kind="mlp",
-                layers=(
+            enc_mlp = (
+                "mlp",
+                (
                     ("dense", {"tokens": enc_t, "d_in": d, "d_out": max(1, f // tp)}),
                     ("dense", {"tokens": enc_t, "d_in": max(1, f // tp), "d_out": d}),
                 ),
-                collective_bytes=enc_t * d * 2.0,
+                enc_t * d * 2.0,
             )
-            blocks += [rep_block(enc_attn, cfg.n_encoder_layers), rep_block(enc_mlp, cfg.n_encoder_layers)]
+            yield body(enc_attn, cfg.n_encoder_layers)
+            yield body(enc_mlp, cfg.n_encoder_layers)
         # decoder: self-attn + cross-attn + mlp
-        cross = Block(
-            kind="attn",
-            layers=(
+        cross = (
+            "attn",
+            (
                 ("dense", {"tokens": t_loc, "d_in": d, "d_out": h_loc * hd}),
                 ("attention_decode" if is_decode else "attention_prefill",
                  ({"B": b_loc, "S_kv": cfg.encoder_seq, "H": h_loc, "Dh": hd, "kv_ratio": kv_ratio}
@@ -162,26 +163,55 @@ def decompose(
                   else {"B": b_loc, "S": cfg.encoder_seq, "H": h_loc, "Dh": hd, "kv_ratio": kv_ratio})),
                 ("dense", {"tokens": t_loc, "d_in": h_loc * hd, "d_out": d}),
             ),
-            collective_bytes=coll_act,
+            coll_act,
         )
-        blocks += [
-            rep_block(attn_block(), cfg.n_layers),
-            rep_block(cross, cfg.n_layers),
-            rep_block(mlp_block(), cfg.n_layers),
-        ]
+        yield body(attn_block(), cfg.n_layers)
+        yield body(cross, cfg.n_layers)
+        yield body(mlp_block(), cfg.n_layers)
     else:
         raise ValueError(cfg.family)
 
     # ---- LM head ----
-    blocks.append(
-        Block(
-            kind="mlp",
-            layers=(("dense", {"tokens": t_loc, "d_in": d, "d_out": max(1, v // tp)}),),
-            collective_bytes=0.0,
-            repeat=rep,
-        )
+    yield (
+        "mlp",
+        (("dense", {"tokens": t_loc, "d_in": d, "d_out": max(1, v // tp)}),),
+        0.0,
+        rep,
     )
-    return blocks
+
+
+def decompose(
+    cfg: ModelConfig,
+    shape: InputShape,
+    dp: int,
+    tp: int,
+    train_factor: float = 3.0,
+) -> list[Block]:
+    """Per-device building blocks of one step.  train_factor ~ (fwd+bwd)/fwd."""
+    return [
+        Block(kind=kind, layers=layers, collective_bytes=coll, repeat=repeat)
+        for kind, layers, coll, repeat in _decompose_plan(cfg, shape, dp, tp, train_factor)
+    ]
+
+
+def decompose_batch(
+    cfg: ModelConfig,
+    shape: InputShape,
+    dp: int,
+    tp: int,
+    train_factor: float = 3.0,
+):
+    """Columnar-native :func:`decompose`: the same plan streamed straight into
+    a :class:`~repro.core.batch.BlockBatch`, skipping the per-block ``Block``
+    objects and the re-grouping pass of ``BlockBatch.from_blocks``.  Field-
+    for-field identical to ``BlockBatch.from_blocks(decompose(...))``.
+    """
+    from repro.core.batch import BlockBatchBuilder
+
+    builder = BlockBatchBuilder()
+    for kind, layers, coll, repeat in _decompose_plan(cfg, shape, dp, tp, train_factor):
+        builder.add(kind, layers, collective_bytes=coll, repeat=repeat)
+    return builder.build()
 
 
 def simulate_network(platform, blocks: Sequence[Block]) -> float:

@@ -111,6 +111,36 @@ def _staircase_fit_rmse(x: np.ndarray, y: np.ndarray, width: int) -> float:
     return float(_staircase_fit_rmse_multi(x, y, [width])[0])
 
 
+def _linear_rows(
+    X: np.ndarray,
+    Y: np.ndarray,
+    threshold_linear: float = 0.02,
+    *,
+    relative: bool = True,
+) -> np.ndarray:
+    """Row-wise :func:`test_linear_behavior` over a stack of same-length sweeps.
+
+    Same operations applied along ``axis=1`` (row reductions run over
+    contiguous memory, so numpy's pairwise summation matches the scalar
+    call), hence the same verdict per row.
+    """
+    X = np.asarray(X, dtype=np.float64)
+    Y = np.asarray(Y, dtype=np.float64)
+    out = np.ones(X.shape[0], dtype=bool)
+    if X.shape[1] < 3:
+        return out
+    y_min, y_max = np.min(Y, axis=1), np.max(Y, axis=1)
+    x_min, x_max = np.min(X, axis=1), np.max(X, axis=1)
+    span = y_max - y_min
+    trivial = (x_max == x_min) | (span == 0.0)
+    dx = np.where(trivial, 1.0, x_max - x_min)
+    slope_avg = span / dx
+    y_hat = slope_avg[:, None] * (X - x_min[:, None]) + y_min[:, None]
+    rmse = np.sqrt(np.mean((Y - y_hat) ** 2, axis=1))
+    thr = threshold_linear * span if relative else np.full_like(span, threshold_linear)
+    return trivial | (rmse < thr)
+
+
 def _detect_width(x: np.ndarray, y: np.ndarray, min_rel_height: float) -> int:
     deltas = execution_time_delta(y)
     if deltas.size == 0:
@@ -159,25 +189,36 @@ def find_step_width(
     while window >= 12:
         xs, ys = x[:window], y[:window]
         if not test_linear_behavior(xs, ys, threshold_linear):
-            width = _detect_width(xs, ys, min_rel_height)
-            if width <= 1:
-                return 1  # non-linear but not step-wise
-            # noise shifts individual peak positions by +-1; pick the
-            # neighbouring width whose staircase fit explains the sweep best
-            # (all candidates scored in one vectorized pass; argmin keeps the
-            # first minimum like min(key=...) did, so ties break identically)
-            cands = sorted({w for w in (width - 1, width, width + 1) if w >= 2})
-            rmses = _staircase_fit_rmse_multi(xs, ys, cands)
-            best = int(np.argmin(rmses))
-            width = cands[best]
-            if window == x.size:
-                return width  # full-window detection needs no extra validation
-            # multi-scale detection: accept only if the staircase fit clearly
-            # beats a straight line (guards against declaring steps on noise)
-            if rmses[best] < 0.7 * _linear_fit_rmse(xs, ys):
-                return width
-            return 1
+            return _decide_at_window(xs, ys, window == x.size, min_rel_height)
         window //= 2
+    return 1
+
+
+def _decide_at_window(
+    xs: np.ndarray, ys: np.ndarray, full_window: bool, min_rel_height: float
+) -> int:
+    """Width decision once a window has screened non-linear (Algorithm 1 tail).
+
+    Shared by the scalar :func:`find_step_width` walk and the batched
+    :func:`determine_step_widths` screen, so the two paths cannot diverge.
+    """
+    width = _detect_width(xs, ys, min_rel_height)
+    if width <= 1:
+        return 1  # non-linear but not step-wise
+    # noise shifts individual peak positions by +-1; pick the
+    # neighbouring width whose staircase fit explains the sweep best
+    # (all candidates scored in one vectorized pass; argmin keeps the
+    # first minimum like min(key=...) did, so ties break identically)
+    cands = sorted({w for w in (width - 1, width, width + 1) if w >= 2})
+    rmses = _staircase_fit_rmse_multi(xs, ys, cands)
+    best = int(np.argmin(rmses))
+    width = cands[best]
+    if full_window:
+        return width  # full-window detection needs no extra validation
+    # multi-scale detection: accept only if the staircase fit clearly
+    # beats a straight line (guards against declaring steps on noise)
+    if rmses[best] < 0.7 * _linear_fit_rmse(xs, ys):
+        return width
     return 1
 
 
@@ -205,10 +246,43 @@ def determine_step_widths(
     sweeps: Mapping[str, tuple[np.ndarray, np.ndarray]] | Sequence[SweepResult],
     threshold_linear: float = 0.02,
 ) -> dict[str, int]:
-    """Algorithm 1 over all swept parameters -> ``{param: step width}``."""
+    """Algorithm 1 over all swept parameters -> ``{param: step width}``.
+
+    The outer per-parameter loop is batched: parameters whose sweeps share a
+    length stack into one matrix and every multi-scale halving level screens
+    all of them with a single row-wise linearity test (:func:`_linear_rows`);
+    only the rows that screen non-linear pay the per-parameter width decision.
+    Same widths as the scalar :func:`find_step_width` loop (asserted in
+    tests), since both share :func:`_decide_at_window`.
+    """
     if not isinstance(sweeps, Mapping):
         sweeps = {s.param: (s.x, s.y) for s in sweeps}
+    items = [
+        (param, np.asarray(x, dtype=np.float64), np.asarray(y, dtype=np.float64))
+        for param, (x, y) in sweeps.items()
+    ]
     widths: dict[str, int] = {}
-    for param, (x, y) in sweeps.items():
-        widths[param] = find_step_width(np.asarray(x), np.asarray(y), threshold_linear)
-    return widths
+    by_size: dict[int, list[tuple[str, np.ndarray, np.ndarray]]] = {}
+    for param, x, y in items:
+        by_size.setdefault(x.size, []).append((param, x, y))
+    for size, group in by_size.items():
+        if len(group) == 1 or size < 12:
+            for param, x, y in group:
+                widths[param] = find_step_width(x, y, threshold_linear)
+            continue
+        X = np.stack([x for _, x, _ in group])
+        Y = np.stack([y for _, _, y in group])
+        active = np.arange(len(group))
+        window = size
+        while window >= 12 and active.size:
+            lin = _linear_rows(X[active, :window], Y[active, :window], threshold_linear)
+            for idx in active[~lin]:
+                param, x, y = group[int(idx)]
+                widths[param] = _decide_at_window(
+                    x[:window], y[:window], window == size, min_rel_height=0.5
+                )
+            active = active[lin]
+            window //= 2
+        for idx in active:
+            widths[group[int(idx)][0]] = 1
+    return {param: widths[param] for param, _, _ in items}

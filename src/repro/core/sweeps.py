@@ -45,7 +45,11 @@ def run_sweeps(
     defaults = platform.defaults(layer_type)
     params = tuple(params) if params is not None else space.params
     anchor = space.with_fixed(defaults)
-    out: dict[str, tuple[np.ndarray, np.ndarray]] = {}
+    # Build every window first, then measure all windows sharing a key set in
+    # ONE platform call (per-row measurement models are order-independent and
+    # the simulators' noise is seeded per configuration, so splicing windows
+    # together cannot change a value; caching platforms dedup across windows).
+    windows: list[tuple[str, np.ndarray, ConfigBatch]] = []
     for p in params:
         lo, hi = space.ranges[p]
         xs = sweep_window(lo, hi, defaults.get(p, lo), n_points)
@@ -54,10 +58,20 @@ def run_sweeps(
         # swept param from defaults(); seed the column so replace() can fill it.
         base_cfg = dict(anchor)
         base_cfg.setdefault(p, int(xs[0]))
-        batch = ConfigBatch.from_anchor(base_cfg, len(xs)).replace(p, xs)
-        ys = platform.measure_batch(layer_type, batch)
-        out[p] = (xs, ys)
-    return out
+        windows.append((p, xs, ConfigBatch.from_anchor(base_cfg, len(xs)).replace(p, xs)))
+    by_keys: dict[tuple[str, ...], list[int]] = {}
+    for i, (_, _, batch) in enumerate(windows):
+        by_keys.setdefault(batch.params, []).append(i)
+    ys_of: dict[int, np.ndarray] = {}
+    for idxs in by_keys.values():
+        merged = ConfigBatch.concat([windows[i][2] for i in idxs])
+        ys = platform.measure_batch(layer_type, merged)
+        off = 0
+        for i in idxs:
+            n = len(windows[i][2])
+            ys_of[i] = np.asarray(ys[off : off + n], dtype=np.float64)
+            off += n
+    return {p: (xs, ys_of[i]) for i, (p, xs, _) in enumerate(windows)}
 
 
 def discover_step_widths(

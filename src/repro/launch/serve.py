@@ -128,6 +128,7 @@ def serve_oracle(args) -> None:
         platforms=tuple(args.warm_platforms or ()),
         window_s=args.window_ms / 1e3,
         cache_capacity=args.cache_capacity,
+        predict_backend=args.predict_backend,
     )
     server = OracleServer(spec=spec)
     sock = OracleSocketServer(
@@ -179,6 +180,10 @@ def main() -> None:
                     help="admission-batching window in milliseconds")
     ap.add_argument("--cache-capacity", type=int, default=65536,
                     help="LRU result-cache capacity (entries)")
+    ap.add_argument("--predict-backend", default=None,
+                    choices=("numpy", "jax", "auto"),
+                    help="inference engine for served oracles "
+                         "(default: REPRO_PREDICT_BACKEND, else numpy)")
     args = ap.parse_args()
 
     if args.serve_oracle:

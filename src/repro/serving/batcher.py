@@ -18,7 +18,12 @@ oracle calls.  Per-item failures are supported: ``process`` may return an
 
 Results are bitwise-independent of batch composition because forest
 predictions are row-independent — coalescing changes wall-clock, never
-answers (asserted in tests/test_serving.py).
+answers (asserted in tests/test_serving.py).  This holds under the jitted
+jax backend too: variable coalesced batch sizes are padded to power-of-two
+row buckets (``repro.core.jax_predict.bucket_rows``) before entering the
+compiled traversal, so a different batch composition changes at most which
+warm-compiled bucket runs, never a row's value — and the steady state
+retraces nothing.
 """
 
 from __future__ import annotations

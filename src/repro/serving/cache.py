@@ -11,7 +11,12 @@ long-lived server sees an unbounded stream of distinct queries, so entries
 are evicted least-recently-used at ``capacity``.
 
 Cached values are the float64 bits the forest produced, so a cache hit is
-bitwise identical to recomputing (asserted in tests/test_serving.py).  All
+bitwise identical to recomputing (asserted in tests/test_serving.py).  That
+invariant must hold **per predict backend**: a key may be shared between the
+numpy and jax engines only where their answers are bitwise-identical (layer
+predictions always; network predictions except jax + log-target, see
+``OracleServer._network_key_scope``, which scopes exactly that combination
+into its own key space — asserted in tests/test_jax_predict.py).  All
 operations take one lock; ``get_many`` refreshes recency for hits.
 """
 

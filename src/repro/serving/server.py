@@ -25,7 +25,13 @@ Coalescing and caching are *bitwise invisible*: forest predictions are
 row-independent and cached values are the exact float64 bits the forest
 produced, so a served answer is always identical to a direct
 ``PerfOracle`` call (asserted in tests/test_serving.py and enforced as a
-hard gate in benchmarks/bench_serve.py).
+hard gate in benchmarks/bench_serve.py).  That contract is backend-aware:
+with ``ServeSpec.predict_backend`` (or ``REPRO_PREDICT_BACKEND``) steering
+queries through the jitted jax engine, cache keys stay shared wherever jax
+and numpy answers are bitwise-identical, and split (:meth:`OracleServer.
+_network_key_scope`) for the one combination where they can differ by a
+rounding ulp — network predictions whose log-target ``exp`` runs inside the
+compiled call.
 
 ``handle(request) -> response`` speaks plain dicts; the wire framing
 (NDJSON over TCP / unix sockets) lives in :mod:`repro.serving.transport`.
@@ -66,6 +72,11 @@ class ServeSpec:
     cache_capacity: int = 65536
     #: sliding latency window per endpoint (observations)
     metrics_window: int = 4096
+    #: predict backend forced onto every served PerfOracle (None = each
+    #: oracle's own default, i.e. REPRO_PREDICT_BACKEND; see
+    #: repro.core.jax_predict).  Applied via dataclasses.replace, so injected
+    #: oracle objects are never mutated.
+    predict_backend: str | None = None
 
 
 def block_payload(block: Block) -> dict:
@@ -185,6 +196,18 @@ class OracleServer:
                 except FileNotFoundError as exc:
                     raise ServingError(str(exc)) from exc
                 self._oracles[platform] = oracle
+            if (
+                self.spec.predict_backend is not None
+                and isinstance(oracle, PerfOracle)
+                and oracle.predict_backend != self.spec.predict_backend
+            ):
+                # Copy-on-apply: the injected/loaded oracle object stays
+                # untouched; the served copy shares forests (and their warm
+                # jitted engines) by reference.
+                oracle = dataclasses.replace(
+                    oracle, predict_backend=self.spec.predict_backend
+                )
+                self._oracles[platform] = oracle
             return oracle
 
     # ----------------------------------------------------- batched dispatch
@@ -266,12 +289,40 @@ class OracleServer:
                 cached[i] = float(yi)
         return cached  # type: ignore[return-value]
 
+    @staticmethod
+    def _network_key_scope(oracle) -> tuple:
+        """Cache-key scope distinguishing backends whose answers can differ.
+
+        Cache hits must be byte-identical to a direct oracle call, so a key
+        may be shared across backends only where parity is bitwise.  Layer
+        predictions always are (the forest traversal is bitwise and the
+        log-target ``exp`` runs in numpy on both backends), so layer keys are
+        never scoped.  Network predictions are bitwise except when the jax
+        backend compiles a log-target ``exp`` into the fused network call —
+        only that combination gets its own key space.
+        """
+        from repro.core.estimator import LayerEstimator
+        from repro.core.jax_predict import resolve_backend
+
+        backend = getattr(oracle, "predict_backend", None)
+        if resolve_backend(backend) != "jax":
+            return ()
+        estimators = getattr(oracle, "estimators", {})
+        if any(
+            est.log_target
+            for est in estimators.values()
+            if isinstance(est, LayerEstimator)
+        ):
+            return ("jax",)
+        return ()
+
     def _network_values(self, platform: str, nets: list[list[Block]]) -> list[float]:
         oracle = self._oracle(platform)
         if not nets:
             return []
+        scope = self._network_key_scope(oracle)
         net_keys = oracle.network_keys(nets)
-        keys = [None if k is None else (platform,) + k for k in net_keys]
+        keys = [None if k is None else (platform, *scope) + k for k in net_keys]
         cached = self.cache.get_many(keys)
         miss = [i for i, v in enumerate(cached) if v is None]
         if miss:
