@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench bench-engine bench-runtime bench-forest bench-blocks bench-serve bench-predict serve-smoke quickstart
+.PHONY: test bench-smoke bench bench-engine bench-runtime bench-forest bench-blocks bench-serve bench-predict bench-obs serve-smoke quickstart
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -26,6 +26,9 @@ bench-serve:
 
 bench-predict:
 	$(PYTHON) -m benchmarks.bench_predict
+
+bench-obs:
+	$(PYTHON) -m benchmarks.bench_obs
 
 serve-smoke:
 	$(PYTHON) -m benchmarks.serve_smoke

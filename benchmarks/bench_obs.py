@@ -1,0 +1,192 @@
+"""Observability overhead: disabled spans cost nanoseconds, enabled <3%.
+
+Two contracts from the PR-8 observability layer, measured on the same
+columnar config path as ``bench_engine`` (PR sampling -> cache-partitioned
+measurement -> feature build on ``tpu_v5e/dense``):
+
+* **disabled** — with no tracer installed, ``span(...)`` is one global read
+  returning a shared singleton: a few hundred nanoseconds, no allocations;
+* **enabled** — with a live tracer appending JSONL trace events, the config
+  path slows by less than ``REPRO_OBS_MAX_OVERHEAD`` (default 3%), and every
+  number produced is bitwise identical to the untraced run (asserted here,
+  the hard gate).  A traced mini-campaign must likewise predict bitwise
+  identically to an untraced one.
+
+Writes ``BENCH_obs.json``::
+
+    PYTHONPATH=src python -m benchmarks.bench_obs [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.api import CachedPlatform, Campaign, CampaignSpec, get_platform
+from repro.core import prs
+from repro.obs.trace import Tracer, load_events, span, tracing
+
+PLATFORM = "tpu_v5e"
+LAYER_TYPE = "dense"
+SEED = 0
+OUT_PATH = "BENCH_obs.json"
+
+
+def _noop_span_ns(n: int = 100_000, repeats: int = 5) -> float:
+    """Best-of-repeats cost of one disabled span (enter + exit), in ns."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            with span("cache.measure_batch"):
+                pass
+        best = min(best, (time.perf_counter() - t0) / n * 1e9)
+    return best
+
+
+def _config_path(est, space, widths, n_samples):
+    """One pass of the columnar config path on a cold cache (all misses)."""
+    rng = np.random.default_rng(SEED)
+    cached = CachedPlatform(get_platform(PLATFORM))
+    batch = prs.sample_pr_batch(space, widths, n_samples, rng)
+    y = cached.measure_batch(LAYER_TYPE, batch)
+    X = est._features(batch, snap=True)
+    return batch, y, X
+
+
+def main() -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="small sizes for CI")
+    args = ap.parse_args()
+    n_samples = 500 if args.smoke else 2000
+    repeats = 25
+    campaign_samples = 300 if args.smoke else 600
+
+    spec = CampaignSpec(
+        platform=PLATFORM,
+        layer_types=(LAYER_TYPE,),
+        n_samples=campaign_samples,
+        seed=SEED,
+        forest_kwargs={"n_estimators": 8, "max_depth": 12},
+    )
+    campaign = Campaign(spec)
+    oracle_quiet = campaign.run()
+    est = campaign.estimators[LAYER_TYPE]
+    space = get_platform(PLATFORM).param_space(LAYER_TYPE)
+    widths = dict(est.widths)
+
+    noop_ns = _noop_span_ns()
+
+    # ---- config path, tracing disabled vs enabled -------------------------
+    # Interleave off/on repetitions (taking the best of each) so clock-speed
+    # drift and cache warmth hit both sides equally; a sequential off-then-on
+    # ordering reads several percent of pure drift as "overhead".
+    tmpdir = tempfile.mkdtemp(prefix="bench_obs_")
+    trace_path = os.path.join(tmpdir, "config_path.jsonl")
+    tracer = Tracer(trace_path)
+    run = lambda: _config_path(est, space, widths, n_samples)  # noqa: E731
+    run()  # warm both code paths before the first timed repetition
+    # Passes per timed repetition: a ~50ms unit tames scheduler/timer jitter
+    # that dwarfs the contract at single-pass (~ms) granularity.
+    inner = max(1, 20000 // n_samples)
+    offs, ons = [], []          # wall seconds per pass (throughput reporting)
+    cpu_offs, cpu_ons = [], []  # process-CPU seconds per pass (overhead gate)
+    q_batch = q_y = q_X = t_batch = t_y = t_X = None
+    for rep in range(repeats):
+        # Alternate which side goes first within each pair, so allocator and
+        # cache state after one side never systematically biases the other.
+        for side in ("off", "on") if rep % 2 == 0 else ("on", "off"):
+            if side == "off":
+                t0, c0 = time.perf_counter(), time.process_time()
+                for _ in range(inner):
+                    q_batch, q_y, q_X = run()
+                cpu_offs.append((time.process_time() - c0) / inner)
+                offs.append((time.perf_counter() - t0) / inner)
+            else:
+                with tracing(tracer):
+                    t0, c0 = time.perf_counter(), time.process_time()
+                    for _ in range(inner):
+                        t_batch, t_y, t_X = run()
+                    cpu_ons.append((time.process_time() - c0) / inner)
+                    ons.append((time.perf_counter() - t0) / inner)
+    events_written = tracer.events_written
+    tracer.close()
+    t_off, t_on = min(offs), min(ons)
+    # The gate compares process-CPU time (immune to VM steal and neighbour
+    # load, which swamp a percent-level contract in wall clock) from *paired*
+    # repetitions; the median rejects the remaining scheduler outliers.
+    overhead = float(
+        np.median(np.asarray(cpu_ons) / np.asarray(cpu_offs))
+    ) - 1.0
+
+    # hard invariant: tracing never changes a number
+    assert t_batch.to_dicts() == q_batch.to_dicts(), "sampled configs diverge"
+    assert np.array_equal(t_y, q_y), "measurements diverge under tracing"
+    assert np.array_equal(t_X, q_X), "feature matrices diverge under tracing"
+    assert events_written > 0 and load_events(trace_path), "tracer wrote nothing"
+
+    # ---- whole campaign, traced vs the untraced run above ----------------
+    campaign_trace = os.path.join(tmpdir, "campaign.jsonl")
+    oracle_traced = Campaign(spec).run(trace=campaign_trace)
+    q_rng = np.random.default_rng(1)
+    queries = prs.sample_random_batch(space, 256, q_rng)
+    assert np.array_equal(
+        oracle_traced.predict(LAYER_TYPE, queries),
+        oracle_quiet.predict(LAYER_TYPE, queries),
+    ), "campaign predictions diverge under tracing"
+    campaign_span_names = sorted(
+        {e["name"] for e in load_events(campaign_trace) if e.get("ph") == "X"}
+    )
+
+    report = {
+        "spec": {
+            "platform": PLATFORM,
+            "layer_type": LAYER_TYPE,
+            "n_samples": n_samples,
+            "campaign_samples": campaign_samples,
+            "seed": SEED,
+            "smoke": args.smoke,
+        },
+        "noop_span_ns": noop_ns,
+        "config_path": {
+            "tracing_off_s": t_off,
+            "tracing_on_s": t_on,
+            "overhead": overhead,
+            "trace_events": events_written,
+        },
+        "campaign": {
+            "parity": True,
+            "span_names": campaign_span_names,
+        },
+        "parity": True,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=1)
+
+    emit("obs.noop_span", noop_ns / 1e3, f"ns_per_span={noop_ns:.0f}")
+    emit("obs.config_path.off", t_off / n_samples * 1e6,
+         f"configs_per_s={n_samples / t_off:.0f}")
+    emit("obs.config_path.on", t_on / n_samples * 1e6,
+         f"configs_per_s={n_samples / t_on:.0f}")
+    emit("obs.overhead", 0.0, f"overhead={overhead * 100:.2f}%")
+
+    # Parity above is the hard invariant; the overhead ceiling guards against
+    # instrumentation creeping onto per-row paths.  Contended CI runners have
+    # noisy wall clocks, so the ceiling is tunable there (REPRO_OBS_MAX_OVERHEAD).
+    max_overhead = float(os.environ.get("REPRO_OBS_MAX_OVERHEAD", "0.03"))
+    if overhead >= max_overhead:
+        raise RuntimeError(
+            f"tracing overhead regression: {overhead * 100:.2f}% "
+            f">= {max_overhead * 100:g}% on the config path"
+        )
+    return report
+
+
+if __name__ == "__main__":
+    main()

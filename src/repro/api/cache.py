@@ -33,6 +33,7 @@ import numpy as np
 from repro.accelerators.base import Platform
 from repro.core.batch import BlockBatch, ConfigBatch
 from repro.core.prs import Config, ParamSpace
+from repro.obs.trace import span
 
 
 def config_key(layer_type: str, cfg: Config) -> tuple:
@@ -538,10 +539,13 @@ class CachedPlatform(Platform):
         if miss_rows.size:
             sub = batch.take(miss_rows)
             t0 = time.perf_counter()
-            if self.runtime is not None:
-                y = self.runtime.measure(layer_type, sub)
-            else:
-                y = self.inner.measure_batch(layer_type, sub)
+            with span("cache.measure_batch",
+                      {"layer_type": layer_type, "misses": int(miss_rows.size),
+                       "hits": len(batch) - int(miss_rows.size)}, cat="cache"):
+                if self.runtime is not None:
+                    y = self.runtime.measure(layer_type, sub)
+                else:
+                    y = self.inner.measure_batch(layer_type, sub)
             self.cache.measure_seconds += time.perf_counter() - t0
             self.cache.store_many(key, layer_type, sub, y)
             missing = miss_map >= 0
@@ -603,10 +607,13 @@ class CachedPlatform(Platform):
         if miss_rows.size:
             sub = batch.take(miss_rows)  # carries the parent's fingerprints
             t0 = time.perf_counter()
-            if self.runtime is not None:
-                y = self.runtime.measure_blocks(sub)
-            else:
-                y = self.inner.measure_block_batch(sub)
+            with span("cache.measure_block_batch",
+                      {"misses": int(miss_rows.size),
+                       "hits": len(batch) - int(miss_rows.size)}, cat="cache"):
+                if self.runtime is not None:
+                    y = self.runtime.measure_blocks(sub)
+                else:
+                    y = self.inner.measure_block_batch(sub)
             self.cache.block_measure_seconds += time.perf_counter() - t0
             fps = batch.fingerprints()
             self.cache.store_blocks(

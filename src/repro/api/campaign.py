@@ -33,6 +33,8 @@ from repro.api.hub import EstimatorHub
 from repro.api.oracle import PerfOracle
 from repro.api.registry import get_platform
 from repro.core import prs, sweeps
+from repro.obs.metrics import metrics as obs_metrics
+from repro.obs.trace import span, tracing
 from repro.core.batch import ConfigBatch
 from repro.core.blocks import Block, FusingModel, fit_fusing_model
 from repro.core.estimator import LayerEstimator
@@ -73,14 +75,18 @@ def train_layer_estimator(
             )
     # The whole training set is one columnar batch: sampled, measured,
     # cache-partitioned and featurized without per-config Python loops.
-    if sampling in ("pr", "random_pr"):
-        configs = prs.sample_pr_batch(space, widths, n_samples, rng)
-    elif sampling == "random":
-        configs = prs.sample_random_batch(space, n_samples, rng)
-    else:
-        raise ValueError(sampling)
+    with span("phase.pr_sampling", {"layer_type": layer_type, "sampling": sampling,
+                                    "n_samples": n_samples}, cat="campaign"):
+        if sampling in ("pr", "random_pr"):
+            configs = prs.sample_pr_batch(space, widths, n_samples, rng)
+        elif sampling == "random":
+            configs = prs.sample_random_batch(space, n_samples, rng)
+        else:
+            raise ValueError(sampling)
 
-    y, mean_t = platform.timed_measure_many(layer_type, configs)
+    with span("phase.measurement", {"layer_type": layer_type, "n": len(configs)},
+              cat="campaign"):
+        y, mean_t = platform.timed_measure_many(layer_type, configs)
     fk = dict(n_estimators=32, max_depth=30, min_samples_leaf=1, seed=seed)
     fk.update(forest_kwargs or {})
     forest = RandomForestRegressor(**fk)
@@ -95,9 +101,11 @@ def train_layer_estimator(
         mean_measure_seconds=mean_t,
         sampling=sampling,
     )
-    X = est._features(configs, snap=(sampling != "random"))
-    target = np.log(np.asarray(y)) if est.log_target else np.asarray(y)
-    forest.fit(X, target)
+    with span("phase.fit", {"layer_type": layer_type, "n": len(configs),
+                            "n_estimators": fk["n_estimators"]}, cat="campaign"):
+        X = est._features(configs, snap=(sampling != "random"))
+        target = np.log(np.asarray(y)) if est.log_target else np.asarray(y)
+        forest.fit(X, target)
     return est
 
 
@@ -149,6 +157,9 @@ class Campaign:
         self.estimators: dict[str, LayerEstimator] = {}
         #: RunStats snapshot of the last ``run(runtime=...)`` (None otherwise)
         self.last_run_stats: dict[str, float] | None = None
+        # Cache hit/miss accounting surfaces as a pull-based gauge: evaluated
+        # only when someone snapshots the metrics, never on the measure path.
+        obs_metrics().register_gauge("campaign.cache", self.cache.stats)
 
     # ------------------------------------------------------------- step widths
     def discover_widths(
@@ -164,9 +175,10 @@ class Campaign:
         hit = self.cache.lookup_widths(self.platform.cache_key(), layer_type, thr, n_points)
         if hit is not None:
             return dict(hit[0]), 0
-        widths, _, n_meas = sweeps.discover_step_widths(
-            self.platform, layer_type, thr, n_points=n_points
-        )
+        with span("phase.step_widths", {"layer_type": layer_type}, cat="campaign"):
+            widths, _, n_meas = sweeps.discover_step_widths(
+                self.platform, layer_type, thr, n_points=n_points
+            )
         self.cache.store_widths(self.platform.cache_key(), layer_type, thr, n_points, widths, n_meas)
         return dict(widths), n_meas
 
@@ -184,17 +196,18 @@ class Campaign:
             widths, n_sweep = None, 0
         else:
             widths, n_sweep = self.discover_widths(layer_type)
-        est = train_layer_estimator(
-            self.platform,
-            layer_type,
-            n_samples if n_samples is not None else self.spec.n_samples,
-            sampling=sampling,
-            seed=seed if seed is not None else self.spec.seed,
-            threshold_linear=self.spec.threshold_linear,
-            forest_kwargs=dict(self.spec.forest_kwargs) if self.spec.forest_kwargs else None,
-            widths=widths,
-            n_sweep=n_sweep,
-        )
+        with span("campaign.train", {"layer_type": layer_type}, cat="campaign"):
+            est = train_layer_estimator(
+                self.platform,
+                layer_type,
+                n_samples if n_samples is not None else self.spec.n_samples,
+                sampling=sampling,
+                seed=seed if seed is not None else self.spec.seed,
+                threshold_linear=self.spec.threshold_linear,
+                forest_kwargs=dict(self.spec.forest_kwargs) if self.spec.forest_kwargs else None,
+                widths=widths,
+                n_sweep=n_sweep,
+            )
         self.estimators[layer_type] = est
         if self.hub is not None:
             self.hub.save(self.platform.name, est)
@@ -251,7 +264,7 @@ class Campaign:
             if owned:
                 rt.close()
 
-    def run(self, runtime=None, **oracle_kwargs) -> PerfOracle:
+    def run(self, runtime=None, trace=None, **oracle_kwargs) -> PerfOracle:
         """Train every layer type in the spec and return the oracle.
 
         ``runtime``: a :class:`repro.runtime.RuntimeSpec` (or a ready
@@ -260,12 +273,23 @@ class Campaign:
         journal.  The journal is replayed into the measurement cache first, so
         an interrupted run resumes with zero duplicate measurements.  Results
         are bitwise-identical to the serial path for any worker count.
+
+        ``trace``: record a span trace of this run — a path (JSONL trace file,
+        opened and closed here), a ready :class:`repro.obs.Tracer`, or ``None``
+        (trace only if a tracer is already installed globally).  Tracing never
+        changes results: the oracle is bitwise identical with it on or off.
         """
-        layer_types = self.spec.layer_types or self.platform.layer_types()
-        with self.runtime_session(runtime):
-            for lt in layer_types:
-                if lt not in self.estimators:
-                    self.train(lt)
+        layer_types = tuple(self.spec.layer_types or self.platform.layer_types())
+        with tracing(trace), span(
+            "campaign.run",
+            {"platform": self.platform.name, "layer_types": list(layer_types),
+             "sampling": self.spec.sampling, "n_samples": self.spec.n_samples},
+            cat="campaign",
+        ):
+            with self.runtime_session(runtime):
+                for lt in layer_types:
+                    if lt not in self.estimators:
+                        self.train(lt)
         oracle_kwargs.setdefault("run_stats", self.last_run_stats)
         return PerfOracle(
             estimators=dict(self.estimators),
@@ -287,11 +311,12 @@ class Campaign:
         lstsq — the whole-network analogue of ``run()``'s per-layer training.
         Requires the relevant layer estimators to be trained already.
         """
-        with self.runtime_session(runtime):
-            return {
-                kind: fit_fusing_model(self.platform, self.estimators, blocks)
-                for kind, blocks in blocks_by_kind.items()
-            }
+        with span("phase.calibrate", {"kinds": sorted(blocks_by_kind)}, cat="campaign"):
+            with self.runtime_session(runtime):
+                return {
+                    kind: fit_fusing_model(self.platform, self.estimators, blocks)
+                    for kind, blocks in blocks_by_kind.items()
+                }
 
     def evaluate_networks(
         self,
@@ -306,8 +331,9 @@ class Campaign:
         across a preceding ``calibrate_fusing``), optionally sharded/
         journaled through a runtime.
         """
-        with self.runtime_session(runtime):
-            return oracle.evaluate_networks(self.platform, networks)
+        with span("phase.eval", {"n_networks": len(networks)}, cat="campaign"):
+            with self.runtime_session(runtime):
+                return oracle.evaluate_networks(self.platform, networks)
 
     # ------------------------------------------------------------- size scans
     def sampling_curve(

@@ -26,6 +26,7 @@ from repro.core.estimator import LayerEstimator
 from repro.core.forest import mape, rmspe
 from repro.core.network import simulate_networks
 from repro.core.prs import Config
+from repro.obs.trace import span
 
 
 @dataclasses.dataclass
@@ -112,14 +113,16 @@ class PerfOracle:
         for i, (lt, batch) in enumerate(items):
             groups.setdefault((lt, batch.params), []).append(i)
         out: list[np.ndarray | None] = [None] * len(items)
-        for (lt, _params), idxs in groups.items():
-            merged = ConfigBatch.concat([items[i][1] for i in idxs])
-            y = self.predict(lt, merged, backend=backend)
-            a = 0
-            for i in idxs:
-                n = len(items[i][1])
-                out[i] = y[a : a + n]
-                a += n
+        with span("oracle.predict_many",
+                  {"items": len(items), "groups": len(groups)}, cat="oracle"):
+            for (lt, _params), idxs in groups.items():
+                merged = ConfigBatch.concat([items[i][1] for i in idxs])
+                y = self.predict(lt, merged, backend=backend)
+                a = 0
+                for i in idxs:
+                    n = len(items[i][1])
+                    out[i] = y[a : a + n]
+                    a += n
         return out  # type: ignore[return-value]
 
     def evaluate(
@@ -283,15 +286,17 @@ class PerfOracle:
         flat = [b for net in networks for b in net]
         if not flat:
             return np.zeros(len(networks), dtype=np.float64)
-        try:
-            batch = BlockBatch.from_blocks(flat)
-        except (ValueError, TypeError):
-            return self._predict_networks_rows(networks, backend)
-        sizes = [len(net) for net in networks]
-        net_id = np.repeat(np.arange(len(networks), dtype=np.int64), sizes)
-        return self.predict_network_batch(
-            batch, net_id, len(networks), backend=backend
-        )
+        with span("oracle.predict_networks",
+                  {"networks": len(networks), "blocks": len(flat)}, cat="oracle"):
+            try:
+                batch = BlockBatch.from_blocks(flat)
+            except (ValueError, TypeError):
+                return self._predict_networks_rows(networks, backend)
+            sizes = [len(net) for net in networks]
+            net_id = np.repeat(np.arange(len(networks), dtype=np.int64), sizes)
+            return self.predict_network_batch(
+                batch, net_id, len(networks), backend=backend
+            )
 
     def _predict_networks_rows(
         self, networks: Sequence[list[Block]], backend: str | None = None

@@ -24,10 +24,13 @@ benchmarks/bench_forest.py.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
 from repro.core import forest_fit
+from repro.obs.metrics import metrics as obs_metrics
+from repro.obs.trace import span
 
 
 @dataclasses.dataclass
@@ -273,23 +276,29 @@ class RandomForestRegressor:
         rng = np.random.default_rng(self.seed)
         n = X.shape[0]
         mf = self._n_features_per_split(X.shape[1])
+        tree_hist = obs_metrics().histogram("fit.tree_seconds")
         self._trees = []
-        for _ in range(self.n_estimators):
-            if self.bootstrap:
-                idx = rng.integers(0, n, size=n)
-            else:
-                idx = np.arange(n)
-            # Vectorized growth (shared argsorts + stacked split search);
-            # bitwise-identical to the frozen ``_build_tree`` reference.  The
-            # bootstrap draw stays inside the loop: it shares the generator
-            # with the per-node feature draws, so hoisting it would shift
-            # every subsequent draw (see forest_fit's module docstring).
-            tree = _Tree(
-                *forest_fit.grow_tree(
-                    X[idx], y[idx], rng, self.max_depth, self.min_samples_leaf, mf
-                )
-            )
-            self._trees.append(tree)
+        with span("fit.forest", {"n": n, "n_estimators": self.n_estimators},
+                  cat="fit"):
+            for i in range(self.n_estimators):
+                t0 = time.perf_counter()
+                with span("fit.tree", {"tree": i}, cat="fit"):
+                    if self.bootstrap:
+                        idx = rng.integers(0, n, size=n)
+                    else:
+                        idx = np.arange(n)
+                    # Vectorized growth (shared argsorts + stacked split search);
+                    # bitwise-identical to the frozen ``_build_tree`` reference.  The
+                    # bootstrap draw stays inside the loop: it shares the generator
+                    # with the per-node feature draws, so hoisting it would shift
+                    # every subsequent draw (see forest_fit's module docstring).
+                    tree = _Tree(
+                        *forest_fit.grow_tree(
+                            X[idx], y[idx], rng, self.max_depth, self.min_samples_leaf, mf
+                        )
+                    )
+                    self._trees.append(tree)
+                tree_hist.observe(time.perf_counter() - t0)
         return self
 
     def predict(self, X: np.ndarray, backend: str | None = None) -> np.ndarray:

@@ -68,11 +68,29 @@ import warnings
 
 import numpy as np
 
+from repro.obs.metrics import metrics as obs_metrics
+
 _ENV_VAR = "REPRO_PREDICT_BACKEND"
 _BACKENDS = ("numpy", "jax", "auto")
 
 #: rows are padded up to the next power of two, at least this many
 _MIN_BUCKET = 64
+
+# Compile/retrace observability: jit caches on argument shapes, so a novel
+# shape signature means XLA is compiling right now.  ``jax.*.calls`` vs
+# ``jax.*.traces`` in the metrics snapshot is the direct retrace-rate signal —
+# ``traces`` growing under steady live traffic means the bucketing is not
+# absorbing the batch-size jitter (a bug this repo previously could not see).
+_seen_forest_sigs: set[tuple] = set()
+_seen_network_sigs: set[tuple] = set()
+
+
+def _count_trace(kind: str, seen: set, sig: tuple) -> None:
+    reg = obs_metrics()
+    reg.inc(f"jax.{kind}.calls")
+    if sig not in seen:
+        seen.add(sig)
+        reg.inc(f"jax.{kind}.traces")
 
 _modules_cache: tuple | None = None
 _import_failed = False
@@ -204,6 +222,10 @@ class ForestEngine:
         nb = bucket_rows(n)
         Xp = np.zeros((nb, d), dtype=np.float64)
         Xp[:n] = X
+        _count_trace(
+            "forest", _seen_forest_sigs,
+            tuple(a.shape for a in self._arrays) + ((nb, d),),
+        )
         _, _, _, enable_x64 = jax_modules()
         fn = _forest_fn()
         with enable_x64():
@@ -348,6 +370,11 @@ def predict_network_batch_jax(oracle, batch, net_id, n_nets) -> np.ndarray | Non
     net_seg[:n_blocks] = net_id
     net_dummy = np.zeros(Nb + 1, dtype=np.float64)
 
+    _count_trace(
+        "network", _seen_network_sigs,
+        (tuple(log_flags), Lb, Bb, Nb)
+        + tuple((g[0].shape, X.shape) for g, X in zip(groups, Xs)),
+    )
     _, _, _, enable_x64 = jax_modules()
     fn = _network_fn(tuple(log_flags))
     with enable_x64():

@@ -25,6 +25,7 @@ from repro.accelerators.base import Platform
 from repro.core import steps
 from repro.core.batch import ConfigBatch
 from repro.core.prs import Config
+from repro.obs.trace import span
 
 
 def sweep_window(lo: int, hi: int, anchor: int, n_points: int = 384) -> np.ndarray:
@@ -95,7 +96,9 @@ def discover_step_widths(
         widths = {p: known.get(p, 1) for p in space.params}
         return widths, {}, 0
 
-    sweeps = run_sweeps(platform, layer_type, n_points=n_points)
+    with span("phase.sweeps", {"layer_type": layer_type, "n_points": n_points},
+              cat="campaign"):
+        sweeps = run_sweeps(platform, layer_type, n_points=n_points)
     n_meas = sum(len(x) for x, _ in sweeps.values())
     discovered = steps.determine_step_widths(sweeps, threshold_linear)
     widths = dict(discovered)

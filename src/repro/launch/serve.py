@@ -117,8 +117,37 @@ def estimate_decode_step(cfg, batch: int, seq_len: int,
     return oracle.predict_network(blocks)
 
 
+def _metrics_reporter(server, interval_s: float):
+    """Daemon loop: print a one-line metrics digest every ``interval_s``."""
+    import threading
+
+    from repro import obs
+
+    stop = threading.Event()
+
+    def loop() -> None:
+        while not stop.wait(interval_s):
+            snap = server.metrics.snapshot()
+            reqs = sum(ep["requests"] for ep in snap["endpoints"].values())
+            errs = sum(ep["errors"] for ep in snap["endpoints"].values())
+            counters = obs.metrics().snapshot()["counters"]
+            print(f"[metrics] {reqs} requests ({errs} errors), "
+                  f"{snap['batches']} batches "
+                  f"(mean {snap['mean_batch_size']:.1f}), "
+                  f"cache {snap['gauges'].get('result_cache')}, "
+                  f"counters {counters}", flush=True)
+
+    t = threading.Thread(target=loop, name="metrics-reporter", daemon=True)
+    t.start()
+    return stop
+
+
 def serve_oracle(args) -> None:
     """Run the oracle estimation service until interrupted (``--serve-oracle``)."""
+    import contextlib
+    import os
+
+    from repro import obs
     from repro.serving import OracleServer, OracleSocketServer, ServeSpec
 
     if not args.hub_dir:
@@ -135,14 +164,26 @@ def serve_oracle(args) -> None:
         server, host=args.host, port=args.port, unix_socket=args.unix_socket
     )
     where = sock.address if args.unix_socket else "%s:%d" % sock.address
+    trace_ctx = contextlib.nullcontext()
+    if args.trace_dir:
+        trace_path = os.path.join(args.trace_dir, f"serve-{os.getpid()}.jsonl")
+        trace_ctx = obs.tracing(trace_path)
+        print(f"tracing to {trace_path} "
+              f"(render: python -m repro.obs.report {trace_path})")
+    reporter = None
+    if args.metrics_interval and args.metrics_interval > 0:
+        reporter = _metrics_reporter(server, args.metrics_interval)
     print(f"oracle server on {where} (hub: {args.hub_dir}, "
           f"platforms: {server.platforms()['hub']}, "
           f"window: {args.window_ms:.1f} ms)")
     try:
-        sock.serve_forever()
+        with trace_ctx:
+            sock.serve_forever()
     except KeyboardInterrupt:
         pass
     finally:
+        if reporter is not None:
+            reporter.set()
         sock.close()
 
 
@@ -184,6 +225,11 @@ def main() -> None:
                     choices=("numpy", "jax", "auto"),
                     help="inference engine for served oracles "
                          "(default: REPRO_PREDICT_BACKEND, else numpy)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="write a span trace (serve-<pid>.jsonl) into this "
+                         "directory; render with python -m repro.obs.report")
+    ap.add_argument("--metrics-interval", type=float, default=0.0,
+                    help="print a metrics digest every N seconds (0 = off)")
     args = ap.parse_args()
 
     if args.serve_oracle:

@@ -35,6 +35,7 @@ from typing import Iterator
 import numpy as np
 
 from repro.core.batch import BlockBatch, ConfigBatch
+from repro.obs.metrics import metrics as obs_metrics
 
 RECORD_VERSION = 1
 _REQUIRED_KEYS = ("platform", "layer_type", "params", "rows", "seconds")
@@ -152,6 +153,10 @@ class MeasurementJournal:
                         np.asarray(record["rows"], dtype=np.int64)
                         np.asarray(record["seconds"], dtype=np.float64)
                 except (ValueError, TypeError, KeyError) as exc:
+                    # Counted before warning: a warnings filter can silence
+                    # the message, but a skipped line must stay visible in
+                    # the metrics snapshot (``counters["journal.corrupt_lines"]``).
+                    obs_metrics().inc("journal.corrupt_lines")
                     warnings.warn(
                         f"{self.path}:{lineno}: skipping corrupt journal line ({exc})",
                         JournalCorruptionWarning,

@@ -42,6 +42,8 @@ from typing import Callable
 import numpy as np
 
 from repro.core.batch import BlockBatch, ConfigBatch
+from repro.obs.metrics import metrics as obs_metrics
+from repro.obs.trace import get_tracer, instant, span
 from repro.runtime.journal import MeasurementJournal
 from repro.runtime.stats import RunStats
 
@@ -128,20 +130,25 @@ class MeasurementScheduler:
 
     @staticmethod
     def _split_result(result) -> tuple:
-        """Split an executor result into ``(times, exec_seconds | None)``.
+        """Split an executor result into ``(times, exec_seconds | None, meta | None)``.
 
-        The built-in executors return ``(times, exec_seconds)`` with the
-        worker-side chunk execution time; third-party executors (and older
-        test doubles) may return a bare array — both are accepted, bare
-        results just contribute no executor-side cost sample.
+        The built-in executors return ``(times, exec_seconds, meta)`` with
+        the worker-side chunk execution time and trace provenance (worker
+        pid + wall window, see :func:`repro.runtime.workers._chunk_meta`).
+        Third-party executors may return the older ``(times, exec_seconds)``
+        pair or a bare array — all three are accepted; missing elements just
+        contribute no cost sample / no worker-track trace span.
         """
+        if isinstance(result, tuple) and isinstance(result[-1], dict):
+            y, exec_s, meta = result
+            return y, float(exec_s), meta
         if (
             isinstance(result, tuple)
             and len(result) == 2
             and isinstance(result[1], (int, float))
         ):
-            return result[0], float(result[1])
-        return result, None
+            return result[0], float(result[1]), None
+        return result, None, None
 
     # ----------------------------------------------------------------- dispatch
     def measure_batch(
@@ -251,7 +258,7 @@ class MeasurementScheduler:
             def callback(fut) -> None:
                 if fut.cancelled() or fut.exception() is not None:
                     return
-                y, _ = MeasurementScheduler._split_result(fut.result())
+                y, _, _ = MeasurementScheduler._split_result(fut.result())
                 y = np.asarray(y, dtype=np.float64)
                 if y.shape != (len(subs[index]),):
                     return  # malformed result: the merge loop will retry it
@@ -261,7 +268,16 @@ class MeasurementScheduler:
                     pass  # append errors re-raise from the merge loop's call
             return callback
 
+        reg = obs_metrics()
+        chunk_counter = reg.counter("runtime.chunks")
+        exec_hist = reg.histogram(f"runtime.{path}.chunk_exec_s")
+        dispatch = span(
+            "runtime.dispatch",
+            {"label": label, "path": path, "items": n, "chunks": len(bounds)},
+            cat="runtime",
+        )
         try:
+            dispatch.__enter__()
             if prefetch:
                 self.stats.in_flight += len(bounds)
                 for index, sub in enumerate(subs):
@@ -272,18 +288,35 @@ class MeasurementScheduler:
                 if not prefetch:
                     self.stats.in_flight += 1
                     futures[index] = self._submit(submit, subs[index], label)
-                y, exec_s = self._gather(submit, label, subs[index], futures[index], index)
+                y, exec_s, meta = self._gather(
+                    submit, label, subs[index], futures[index], index
+                )
                 out[a:b] = y
                 self.stats.in_flight -= 1
                 self.stats.chunks += 1
                 self.stats.measured += b - a
+                chunk_counter.inc()
                 if exec_s is not None:
                     self.stats.exec_seconds += exec_s
+                    exec_hist.observe(exec_s)
                     exec_pool = self._exec_costs.setdefault(path, [0, 0.0])
                     exec_pool[0] += b - a
                     exec_pool[1] += exec_s
+                tracer = get_tracer()
+                if tracer is not None and meta is not None and "pid" in meta:
+                    # Replay the chunk's worker-side wall window onto a
+                    # per-worker track (tid = worker pid) so pool chunks show
+                    # up as parallel lanes in Perfetto.
+                    tracer.worker_chunk(
+                        f"chunk[{label}]",
+                        meta["pid"],
+                        meta["t0"],
+                        meta["t1"],
+                        args={"index": index, "items": b - a},
+                    )
                 journal_chunk(index, y, authoritative=True)
         finally:
+            dispatch.__exit__(None, None, None)
             # On abort the remaining submissions are moot; don't leave the
             # progress surface claiming they are still in flight.
             self.stats.in_flight = 0
@@ -314,7 +347,7 @@ class MeasurementScheduler:
 
     def _gather(
         self, submit: Callable, label: str, sub, future, index: int
-    ) -> tuple[np.ndarray, float | None]:
+    ) -> tuple[np.ndarray, float | None, dict | None]:
         attempt = 0
         while True:
             # A resubmission lands at the back of the pool's queue, behind
@@ -326,28 +359,37 @@ class MeasurementScheduler:
             if timeout is not None and attempt > 0:
                 timeout = timeout * (1 + max(0, self.stats.in_flight))
             try:
-                y, exec_s = self._split_result(future.result(timeout=timeout))
+                y, exec_s, meta = self._split_result(future.result(timeout=timeout))
                 y = np.asarray(y, dtype=np.float64)
                 if y.shape != (len(sub),):
                     raise ValueError(
                         f"executor returned shape {y.shape} for a {len(sub)}-row chunk"
                     )
-                return y, exec_s
+                return y, exec_s, meta
             except Exception as exc:  # TimeoutError included; KeyboardInterrupt not
                 attempt += 1
                 if attempt > self.max_retries:
                     self.stats.failures += 1
+                    obs_metrics().inc("runtime.failures")
                     raise MeasurementError(
                         f"chunk {index} of {label!r} ({len(sub)} items) "
                         f"failed after {attempt} attempt(s): {exc}"
                     ) from exc
                 self.stats.retries += 1
+                obs_metrics().inc("runtime.retries")
+                instant(
+                    "runtime.retry",
+                    {"label": label, "chunk": index, "attempt": attempt,
+                     "error": type(exc).__name__},
+                    cat="runtime",
+                )
                 future.cancel()
                 time.sleep(self.retry_backoff_s * (2 ** (attempt - 1)))
                 try:
                     future = self._submit(submit, sub, label)
                 except Exception as submit_exc:
                     self.stats.failures += 1
+                    obs_metrics().inc("runtime.failures")
                     raise MeasurementError(
                         f"chunk {index} of {label!r} could not be resubmitted "
                         f"after a failed attempt: {submit_exc}"

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import importlib
 import multiprocessing
+import os
 import time
 from concurrent.futures import Future, ProcessPoolExecutor
 
@@ -54,28 +55,43 @@ def _init_worker(spec) -> None:
         _WORKER_PLATFORM = registry.get_platform(name, **dict(kwargs))
 
 
+def _chunk_meta(w0: float, w1: float) -> dict:
+    """Provenance for one measured chunk: which process, over which wall window.
+
+    The parent-side tracer maps the wall-clock window onto its own timeline
+    (``Tracer.wall_us``) and emits the chunk as a span on a per-worker track,
+    so a Perfetto view of the trace shows pool workers running in parallel.
+    Wall clock (``time.time``) is used — unlike ``perf_counter`` its epoch is
+    shared across processes.
+    """
+    return {"pid": os.getpid(), "t0": w0, "t1": w1}
+
+
 def _measure_chunk(
     layer_type: str, params: tuple, values: np.ndarray
-) -> tuple[np.ndarray, float]:
+) -> tuple[np.ndarray, float, dict]:
     """Worker-side entry point: measure one chunk on the per-process platform.
 
-    Returns ``(times, exec_seconds)`` — the second element is the chunk's
+    Returns ``(times, exec_seconds, meta)`` — ``exec_seconds`` is the chunk's
     execution time measured *worker-side*, around the platform call only.
     Unlike the scheduler's dispatch-loop wall clock it contains no IPC,
     pickling or queue wait, so the scheduler's adaptive chunk sizing gets a
-    clean per-item cost signal (see ``effective_chunk_size``).
+    clean per-item cost signal (see ``effective_chunk_size``).  ``meta`` is
+    the chunk's trace provenance (:func:`_chunk_meta`).
     """
     batch = ConfigBatch(params=tuple(params), values=np.asarray(values, dtype=np.int64))
+    w0 = time.time()
     t0 = time.perf_counter()
     y = np.asarray(_WORKER_PLATFORM.measure_batch(layer_type, batch), dtype=np.float64)
-    return y, time.perf_counter() - t0
+    return y, time.perf_counter() - t0, _chunk_meta(w0, time.time())
 
 
-def _measure_block_chunk(batch: BlockBatch) -> tuple[np.ndarray, float]:
+def _measure_block_chunk(batch: BlockBatch) -> tuple[np.ndarray, float, dict]:
     """Worker-side entry point for one block chunk (BlockBatch pickles whole)."""
+    w0 = time.time()
     t0 = time.perf_counter()
     y = np.asarray(_WORKER_PLATFORM.measure_block_batch(batch), dtype=np.float64)
-    return y, time.perf_counter() - t0
+    return y, time.perf_counter() - t0, _chunk_meta(w0, time.time())
 
 
 class SerialExecutor:
@@ -93,11 +109,13 @@ class SerialExecutor:
     def submit(self, layer_type: str, batch: ConfigBatch) -> Future:
         future: Future = Future()
         try:
+            w0 = time.time()
             t0 = time.perf_counter()
             y = np.asarray(
                 self.platform.measure_batch(layer_type, batch), dtype=np.float64
             )
-            future.set_result((y, time.perf_counter() - t0))
+            exec_s = time.perf_counter() - t0
+            future.set_result((y, exec_s, _chunk_meta(w0, time.time())))
         except Exception as exc:
             future.set_exception(exc)
         return future
@@ -105,9 +123,11 @@ class SerialExecutor:
     def submit_blocks(self, batch: BlockBatch) -> Future:
         future: Future = Future()
         try:
+            w0 = time.time()
             t0 = time.perf_counter()
             y = np.asarray(self.platform.measure_block_batch(batch), dtype=np.float64)
-            future.set_result((y, time.perf_counter() - t0))
+            exec_s = time.perf_counter() - t0
+            future.set_result((y, exec_s, _chunk_meta(w0, time.time())))
         except Exception as exc:
             future.set_exception(exc)
         return future

@@ -1,117 +1,11 @@
-"""Latency/throughput metrics for the oracle serving layer.
+"""Back-compat shim: the serving metrics moved to :mod:`repro.obs.metrics`.
 
-The serving story is quantitative — "the estimator answers queries essentially
-for free" is only demonstrable with per-endpoint latency percentiles and
-throughput next to the cache hit rate — so the registry is a first-class part
-of the subsystem, not an afterthought.  One :class:`MetricsRegistry` per
-server records, per endpoint (``predict``, ``predict_networks``, ...):
-
-* request count, error count, items served (configs / networks);
-* a sliding window of end-to-end latencies -> p50/p95/p99 (numpy percentile
-  over the last ``window`` observations, so a long-lived server reports
-  current behaviour, not its cold start);
-* requests/s and items/s since construction;
-
-plus one server-wide **batch-size histogram** (power-of-two buckets) fed by
-the admission batcher — the direct evidence that coalescing is happening.
-Everything is guarded by one lock; observation cost is a deque append.
+PR 8 unified the serving registry with pipeline-wide counters, pull-based
+gauges, and value histograms; the endpoint/batch API and snapshot keys are
+unchanged (plus new ``counters``/``gauges``/``histograms`` sections).  Import
+from :mod:`repro.obs` in new code.
 """
 
-from __future__ import annotations
+from repro.obs.metrics import PERCENTILES, MetricsRegistry
 
-import threading
-import time
-from collections import deque
-
-import numpy as np
-
-#: latency percentiles reported by :meth:`MetricsRegistry.snapshot`
-PERCENTILES = (50.0, 95.0, 99.0)
-
-
-class _Endpoint:
-    __slots__ = ("count", "errors", "items", "latencies")
-
-    def __init__(self, window: int) -> None:
-        self.count = 0
-        self.errors = 0
-        self.items = 0
-        self.latencies: deque[float] = deque(maxlen=window)
-
-
-class MetricsRegistry:
-    """Thread-safe per-endpoint latency/throughput accounting."""
-
-    def __init__(self, window: int = 4096) -> None:
-        self.window = int(window)
-        self._lock = threading.Lock()
-        self._endpoints: dict[str, _Endpoint] = {}
-        #: power-of-two bucket -> number of dispatched admission batches
-        self._batch_hist: dict[int, int] = {}
-        self._batches = 0
-        self._batched_items = 0
-        self._started_at = time.perf_counter()
-
-    # ------------------------------------------------------------- recording
-    def observe(
-        self, endpoint: str, latency_s: float, items: int = 1, error: bool = False
-    ) -> None:
-        """Record one served request (end-to-end wall latency, item count)."""
-        with self._lock:
-            ep = self._endpoints.get(endpoint)
-            if ep is None:
-                ep = self._endpoints[endpoint] = _Endpoint(self.window)
-            ep.count += 1
-            ep.items += int(items)
-            if error:
-                ep.errors += 1
-            else:
-                ep.latencies.append(float(latency_s))
-
-    def observe_batch(self, size: int) -> None:
-        """Record one dispatched admission batch (for the size histogram)."""
-        if size <= 0:
-            return
-        bucket = 1 << (int(size) - 1).bit_length()  # 1,2,4,8,...
-        with self._lock:
-            self._batch_hist[bucket] = self._batch_hist.get(bucket, 0) + 1
-            self._batches += 1
-            self._batched_items += int(size)
-
-    # ------------------------------------------------------------- reporting
-    def elapsed(self) -> float:
-        return max(time.perf_counter() - self._started_at, 1e-9)
-
-    def snapshot(self) -> dict:
-        """Plain-dict view for the stats endpoint / BENCH_serve.json."""
-        with self._lock:
-            elapsed = self.elapsed()
-            endpoints = {}
-            for name, ep in self._endpoints.items():
-                lat = np.asarray(ep.latencies, dtype=np.float64)
-                pcts = (
-                    {
-                        f"p{int(p)}_ms": float(np.percentile(lat, p)) * 1e3
-                        for p in PERCENTILES
-                    }
-                    if lat.size
-                    else {f"p{int(p)}_ms": None for p in PERCENTILES}
-                )
-                endpoints[name] = {
-                    "requests": ep.count,
-                    "errors": ep.errors,
-                    "items": ep.items,
-                    "requests_per_s": ep.count / elapsed,
-                    "items_per_s": ep.items / elapsed,
-                    **pcts,
-                }
-            mean_batch = self._batched_items / self._batches if self._batches else 0.0
-            return {
-                "elapsed_s": elapsed,
-                "endpoints": endpoints,
-                "batches": self._batches,
-                "mean_batch_size": mean_batch,
-                "batch_size_hist": {
-                    str(k): v for k, v in sorted(self._batch_hist.items())
-                },
-            }
+__all__ = ["MetricsRegistry", "PERCENTILES"]

@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 import threading
 import time
 from typing import Any, Mapping, Sequence
@@ -51,6 +52,8 @@ from repro.api.cache import batch_keys
 from repro.api.oracle import PerfOracle
 from repro.core.batch import ConfigBatch
 from repro.core.blocks import Block
+from repro.obs.metrics import metrics as obs_metrics
+from repro.obs.trace import get_tracer, span
 from repro.serving.batcher import AdmissionBatcher, ServingError
 from repro.serving.cache import ResultCache
 from repro.serving.metrics import MetricsRegistry
@@ -152,6 +155,9 @@ class OracleServer:
         self._oracle_lock = threading.Lock()
         self.cache = ResultCache(capacity=spec.cache_capacity)
         self.metrics = MetricsRegistry(window=spec.metrics_window)
+        # Hit/miss/eviction accounting with zero hot-path cost: the gauge
+        # pulls ResultCache.stats() only when someone snapshots the metrics.
+        self.metrics.register_gauge("result_cache", self.cache.stats)
         self.batcher = AdmissionBatcher(
             self._process,
             window_s=spec.window_s,
@@ -221,6 +227,11 @@ class OracleServer:
         :meth:`PerfOracle.predict_networks` pass.  A failing group poisons
         only its own waiters (results may be Exception instances).
         """
+        dispatch = span("serve.coalesce", {"payloads": len(payloads)}, cat="serving")
+        with dispatch:
+            return self._process_batch(payloads)
+
+    def _process_batch(self, payloads: Sequence[tuple]) -> list:
         out: list = [None] * len(payloads)
         layer_groups: dict[str, list[tuple[int, str, ConfigBatch]]] = {}
         net_groups: dict[str, list[tuple[int, list]]] = {}
@@ -402,11 +413,21 @@ class OracleServer:
         return result, len(result)
 
     def _op_stats(self, request: Mapping) -> tuple[Any, int]:
+        tracer = get_tracer()
         return {
             "uptime_s": time.perf_counter() - self._started_at,
             "platforms": self.platforms(),
             "result_cache": self.cache.stats(),
             "metrics": self.metrics.snapshot(),
+            # Process-wide observability: pipeline counters/gauges/histograms
+            # (jax retrace counts, journal corruption, runtime retries) plus
+            # where the active trace, if any, is being written.
+            "obs": {
+                "pid": os.getpid(),
+                "process_metrics": obs_metrics().snapshot(),
+                "trace_path": getattr(tracer, "path", None),
+                "trace_events": getattr(tracer, "events_written", 0),
+            },
         }, 1
 
     def _op_platforms(self, request: Mapping) -> tuple[Any, int]:
@@ -443,7 +464,8 @@ class OracleServer:
                 raise ServingError(
                     f"unknown op {op!r}; available: {sorted(self._handlers)}"
                 )
-            result, items = handler(request)
+            with span(f"serve.{op}", cat="serving"):
+                result, items = handler(request)
         except Exception as exc:  # noqa: BLE001 - error becomes the response
             self.metrics.observe(
                 str(op) if op else "invalid",

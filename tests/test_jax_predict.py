@@ -121,6 +121,7 @@ def test_no_eager_jax_import():
     code = (
         "import sys\n"
         "import repro.api, repro.serving\n"
+        "import repro.obs, repro.obs.report, repro.obs.metrics, repro.obs.trace\n"
         "import repro.core.jax_predict, repro.core.steps, repro.core.sweeps\n"
         "import repro.accelerators.jax_kernels\n"
         "import repro.accelerators.tpu_v5e, repro.accelerators.ultratrail\n"
