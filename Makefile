@@ -1,10 +1,13 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench bench-engine bench-runtime bench-forest bench-blocks bench-serve bench-predict bench-obs serve-smoke quickstart
+.PHONY: test lint bench-smoke bench bench-engine bench-runtime bench-forest bench-blocks bench-serve bench-predict bench-obs bench-analysis serve-smoke quickstart
 
 test:
 	$(PYTHON) -m pytest -x -q
+
+lint:
+	$(PYTHON) -m repro.analysis src
 
 bench-smoke:
 	$(PYTHON) -m benchmarks.run table1 fig2
@@ -29,6 +32,9 @@ bench-predict:
 
 bench-obs:
 	$(PYTHON) -m benchmarks.bench_obs
+
+bench-analysis:
+	$(PYTHON) -m benchmarks.bench_analysis
 
 serve-smoke:
 	$(PYTHON) -m benchmarks.serve_smoke

@@ -1,0 +1,12 @@
+#!/usr/bin/env sh
+# repro-lint entry point — pre-commit hook / local gate, same command CI runs.
+#
+#   scripts/lint.sh               # lint src/ (text report, exit 1 on findings)
+#   scripts/lint.sh --format json # the CI-gate schema
+#   scripts/lint.sh path/to/file.py ...
+#
+# The linter is stdlib-only: this works on a bare Python before any
+# dependency installs (ln -s ../../scripts/lint.sh .git/hooks/pre-commit).
+set -eu
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec "${PYTHON:-python}" -m repro.analysis "$@"

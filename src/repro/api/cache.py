@@ -539,9 +539,11 @@ class CachedPlatform(Platform):
         if miss_rows.size:
             sub = batch.take(miss_rows)
             t0 = time.perf_counter()
-            with span("cache.measure_batch",
-                      {"layer_type": layer_type, "misses": int(miss_rows.size),
-                       "hits": len(batch) - int(miss_rows.size)}, cat="cache"):
+            sp = span("cache.measure_batch", cat="cache")
+            if sp:
+                sp.set(layer_type=layer_type, misses=int(miss_rows.size),
+                       hits=len(batch) - int(miss_rows.size))
+            with sp:
                 if self.runtime is not None:
                     y = self.runtime.measure(layer_type, sub)
                 else:
@@ -607,9 +609,11 @@ class CachedPlatform(Platform):
         if miss_rows.size:
             sub = batch.take(miss_rows)  # carries the parent's fingerprints
             t0 = time.perf_counter()
-            with span("cache.measure_block_batch",
-                      {"misses": int(miss_rows.size),
-                       "hits": len(batch) - int(miss_rows.size)}, cat="cache"):
+            sp = span("cache.measure_block_batch", cat="cache")
+            if sp:
+                sp.set(misses=int(miss_rows.size),
+                       hits=len(batch) - int(miss_rows.size))
+            with sp:
                 if self.runtime is not None:
                     y = self.runtime.measure_blocks(sub)
                 else:

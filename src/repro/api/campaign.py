@@ -75,8 +75,10 @@ def train_layer_estimator(
             )
     # The whole training set is one columnar batch: sampled, measured,
     # cache-partitioned and featurized without per-config Python loops.
-    with span("phase.pr_sampling", {"layer_type": layer_type, "sampling": sampling,
-                                    "n_samples": n_samples}, cat="campaign"):
+    sp = span("phase.pr_sampling", cat="campaign")
+    if sp:
+        sp.set(layer_type=layer_type, sampling=sampling, n_samples=n_samples)
+    with sp:
         if sampling in ("pr", "random_pr"):
             configs = prs.sample_pr_batch(space, widths, n_samples, rng)
         elif sampling == "random":
@@ -84,8 +86,10 @@ def train_layer_estimator(
         else:
             raise ValueError(sampling)
 
-    with span("phase.measurement", {"layer_type": layer_type, "n": len(configs)},
-              cat="campaign"):
+    sp = span("phase.measurement", cat="campaign")
+    if sp:
+        sp.set(layer_type=layer_type, n=len(configs))
+    with sp:
         y, mean_t = platform.timed_measure_many(layer_type, configs)
     fk = dict(n_estimators=32, max_depth=30, min_samples_leaf=1, seed=seed)
     fk.update(forest_kwargs or {})
@@ -101,8 +105,11 @@ def train_layer_estimator(
         mean_measure_seconds=mean_t,
         sampling=sampling,
     )
-    with span("phase.fit", {"layer_type": layer_type, "n": len(configs),
-                            "n_estimators": fk["n_estimators"]}, cat="campaign"):
+    sp = span("phase.fit", cat="campaign")
+    if sp:
+        sp.set(layer_type=layer_type, n=len(configs),
+               n_estimators=fk["n_estimators"])
+    with sp:
         X = est._features(configs, snap=(sampling != "random"))
         target = np.log(np.asarray(y)) if est.log_target else np.asarray(y)
         forest.fit(X, target)
@@ -175,7 +182,10 @@ class Campaign:
         hit = self.cache.lookup_widths(self.platform.cache_key(), layer_type, thr, n_points)
         if hit is not None:
             return dict(hit[0]), 0
-        with span("phase.step_widths", {"layer_type": layer_type}, cat="campaign"):
+        sp = span("phase.step_widths", cat="campaign")
+        if sp:
+            sp.set(layer_type=layer_type)
+        with sp:
             widths, _, n_meas = sweeps.discover_step_widths(
                 self.platform, layer_type, thr, n_points=n_points
             )
@@ -196,7 +206,10 @@ class Campaign:
             widths, n_sweep = None, 0
         else:
             widths, n_sweep = self.discover_widths(layer_type)
-        with span("campaign.train", {"layer_type": layer_type}, cat="campaign"):
+        sp = span("campaign.train", cat="campaign")
+        if sp:
+            sp.set(layer_type=layer_type)
+        with sp:
             est = train_layer_estimator(
                 self.platform,
                 layer_type,
@@ -280,13 +293,17 @@ class Campaign:
         changes results: the oracle is bitwise identical with it on or off.
         """
         layer_types = tuple(self.spec.layer_types or self.platform.layer_types())
-        with tracing(trace), span(
-            "campaign.run",
-            {"platform": self.platform.name, "layer_types": list(layer_types),
-             "sampling": self.spec.sampling, "n_samples": self.spec.n_samples},
-            cat="campaign",
-        ):
-            with self.runtime_session(runtime):
+        with tracing(trace):
+            # The span is created *inside* the tracing block (it must see the
+            # tracer `trace` just installed), but its args still go through
+            # the if-sp gate so the trace=None fast path allocates nothing.
+            sp = span("campaign.run", cat="campaign")
+            if sp:
+                sp.set(platform=self.platform.name,
+                       layer_types=list(layer_types),
+                       sampling=self.spec.sampling,
+                       n_samples=self.spec.n_samples)
+            with sp, self.runtime_session(runtime):
                 for lt in layer_types:
                     if lt not in self.estimators:
                         self.train(lt)
@@ -311,7 +328,10 @@ class Campaign:
         lstsq — the whole-network analogue of ``run()``'s per-layer training.
         Requires the relevant layer estimators to be trained already.
         """
-        with span("phase.calibrate", {"kinds": sorted(blocks_by_kind)}, cat="campaign"):
+        sp = span("phase.calibrate", cat="campaign")
+        if sp:
+            sp.set(kinds=sorted(blocks_by_kind))
+        with sp:
             with self.runtime_session(runtime):
                 return {
                     kind: fit_fusing_model(self.platform, self.estimators, blocks)
@@ -331,7 +351,10 @@ class Campaign:
         across a preceding ``calibrate_fusing``), optionally sharded/
         journaled through a runtime.
         """
-        with span("phase.eval", {"n_networks": len(networks)}, cat="campaign"):
+        sp = span("phase.eval", cat="campaign")
+        if sp:
+            sp.set(n_networks=len(networks))
+        with sp:
             with self.runtime_session(runtime):
                 return oracle.evaluate_networks(self.platform, networks)
 

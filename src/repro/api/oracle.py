@@ -113,8 +113,10 @@ class PerfOracle:
         for i, (lt, batch) in enumerate(items):
             groups.setdefault((lt, batch.params), []).append(i)
         out: list[np.ndarray | None] = [None] * len(items)
-        with span("oracle.predict_many",
-                  {"items": len(items), "groups": len(groups)}, cat="oracle"):
+        sp = span("oracle.predict_many", cat="oracle")
+        if sp:
+            sp.set(items=len(items), groups=len(groups))
+        with sp:
             for (lt, _params), idxs in groups.items():
                 merged = ConfigBatch.concat([items[i][1] for i in idxs])
                 y = self.predict(lt, merged, backend=backend)
@@ -286,8 +288,10 @@ class PerfOracle:
         flat = [b for net in networks for b in net]
         if not flat:
             return np.zeros(len(networks), dtype=np.float64)
-        with span("oracle.predict_networks",
-                  {"networks": len(networks), "blocks": len(flat)}, cat="oracle"):
+        sp = span("oracle.predict_networks", cat="oracle")
+        if sp:
+            sp.set(networks=len(networks), blocks=len(flat))
+        with sp:
             try:
                 batch = BlockBatch.from_blocks(flat)
             except (ValueError, TypeError):

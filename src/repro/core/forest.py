@@ -147,6 +147,10 @@ def _build_tree(
         value[node_id] = float(y_node.mean())
         if depth >= max_depth or idx.size < 2 * min_samples_leaf or np.all(y_node == y_node[0]):
             continue
+        # repro-lint: disable=rng-discipline -- the per-node draw order IS the
+        # v1 estimator stream contract: nodes pop in stack order and each
+        # consumes one choice() draw; reordering re-keys every golden forest
+        # (RNG contract v2 in ROADMAP is the sanctioned way to change this)
         feats = rng.choice(n_features, size=min(max_features, n_features), replace=False)
         best_gain = 0.0
         best_feat = -1
@@ -278,12 +282,21 @@ class RandomForestRegressor:
         mf = self._n_features_per_split(X.shape[1])
         tree_hist = obs_metrics().histogram("fit.tree_seconds")
         self._trees = []
-        with span("fit.forest", {"n": n, "n_estimators": self.n_estimators},
-                  cat="fit"):
+        sp = span("fit.forest", cat="fit")
+        if sp:
+            sp.set(n=n, n_estimators=self.n_estimators)
+        with sp:
             for i in range(self.n_estimators):
                 t0 = time.perf_counter()
-                with span("fit.tree", {"tree": i}, cat="fit"):
+                tree_sp = span("fit.tree", cat="fit")
+                if tree_sp:
+                    tree_sp.set(tree=i)
+                with tree_sp:
                     if self.bootstrap:
+                        # repro-lint: disable=rng-discipline -- `bootstrap` is
+                        # a fit-time hyperparameter, constant for the whole
+                        # fit: the draw count per tree is fixed per estimator
+                        # config, exactly what the v1 stream contract freezes
                         idx = rng.integers(0, n, size=n)
                     else:
                         idx = np.arange(n)

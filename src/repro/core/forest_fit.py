@@ -158,6 +158,9 @@ def grow_tree(
                     break
             else:
                 continue  # constant target -> leaf
+            # repro-lint: disable=rng-discipline -- scalar reference path:
+            # one choice() draw per non-leaf node in stack-pop order is the
+            # frozen v1 bitstream the vectorized path must reproduce exactly
             feats = choice(n_features, k_draw, False)
             tsq = y0 * y0
             for v in yv[1:]:
@@ -248,6 +251,9 @@ def grow_tree(
         # finite targets, two allocation-free reductions instead of eq + all.
         if depth >= max_depth or m < 2 * msl or y_node.min() == y_node.max():
             continue
+        # repro-lint: disable=rng-discipline -- positional draw mirrors the
+        # reference's per-node stream consumption; the conditional structure
+        # is the tree shape itself, which the v1 stream contract freezes
         feats = choice(n_features, k_draw, False)  # positional: same bitstream
         total_sum = node_sum
         total_sq = float((y_node * y_node).sum())

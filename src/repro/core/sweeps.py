@@ -96,8 +96,10 @@ def discover_step_widths(
         widths = {p: known.get(p, 1) for p in space.params}
         return widths, {}, 0
 
-    with span("phase.sweeps", {"layer_type": layer_type, "n_points": n_points},
-              cat="campaign"):
+    sp = span("phase.sweeps", cat="campaign")
+    if sp:
+        sp.set(layer_type=layer_type, n_points=n_points)
+    with sp:
         sweeps = run_sweeps(platform, layer_type, n_points=n_points)
     n_meas = sum(len(x) for x, _ in sweeps.values())
     discovered = steps.determine_step_widths(sweeps, threshold_linear)

@@ -40,8 +40,6 @@ import time
 from collections import deque
 from typing import Callable, Mapping
 
-import numpy as np
-
 #: latency percentiles reported by :meth:`MetricsRegistry.snapshot`
 PERCENTILES = (50.0, 95.0, 99.0)
 
@@ -54,6 +52,11 @@ def percentile_summary(
     ``n == 0`` -> every percentile is ``None``; ``n == 1`` -> every percentile
     is that sample.  ``scale`` converts units (1e3 for seconds -> ms keys).
     """
+    # Deferred so that importing repro.obs stays stdlib-only (the module is
+    # on the bare-Python report/analysis path); numpy is only needed at
+    # snapshot time, never on the observation hot path.
+    import numpy as np
+
     arr = np.asarray(values, dtype=np.float64)
     keys = [f"p{int(p)}{suffix}" for p in PERCENTILES]
     if arr.size == 0:

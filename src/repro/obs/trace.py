@@ -261,9 +261,13 @@ class Tracer:
     def _track(self, pid: int, tid: int, name: str | None = None) -> None:
         """Label a (pid, tid) track once, so Perfetto shows readable names."""
         key = (pid, tid)
-        if key in self._known_tracks:
-            return
-        self._known_tracks.add(key)
+        # Reserve the key under the lock: the bare check-then-add was a race
+        # where two threads hitting a new track both emitted metadata records
+        # (found by the lock-mutation checker's review of this module).
+        with self._lock:
+            if key in self._known_tracks:
+                return
+            self._known_tracks.add(key)
         if pid != self.pid:
             self._write(
                 {

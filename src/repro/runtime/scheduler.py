@@ -271,11 +271,9 @@ class MeasurementScheduler:
         reg = obs_metrics()
         chunk_counter = reg.counter("runtime.chunks")
         exec_hist = reg.histogram(f"runtime.{path}.chunk_exec_s")
-        dispatch = span(
-            "runtime.dispatch",
-            {"label": label, "path": path, "items": n, "chunks": len(bounds)},
-            cat="runtime",
-        )
+        dispatch = span("runtime.dispatch", cat="runtime")
+        if dispatch:
+            dispatch.set(label=label, path=path, items=n, chunks=len(bounds))
         try:
             dispatch.__enter__()
             if prefetch:
@@ -377,12 +375,13 @@ class MeasurementScheduler:
                     ) from exc
                 self.stats.retries += 1
                 obs_metrics().inc("runtime.retries")
-                instant(
-                    "runtime.retry",
-                    {"label": label, "chunk": index, "attempt": attempt,
-                     "error": type(exc).__name__},
-                    cat="runtime",
-                )
+                if get_tracer() is not None:
+                    instant(
+                        "runtime.retry",
+                        {"label": label, "chunk": index, "attempt": attempt,
+                         "error": type(exc).__name__},
+                        cat="runtime",
+                    )
                 future.cancel()
                 time.sleep(self.retry_backoff_s * (2 ** (attempt - 1)))
                 try:

@@ -91,7 +91,7 @@ class AdmissionBatcher:
         return pending.result
 
     # ------------------------------------------------------------- dispatcher
-    def _drain(self) -> list[_Pending]:
+    def _drain_locked(self) -> list[_Pending]:
         batch = self._queue[: self.max_batch]
         del self._queue[: len(batch)]
         return batch
@@ -111,7 +111,7 @@ class AdmissionBatcher:
                     if remaining <= 0 or self._closed:
                         break
                     self._cond.wait(timeout=remaining)
-                batch = self._drain()
+                batch = self._drain_locked()
             self._dispatch(batch)
 
     def _dispatch(self, batch: list[_Pending]) -> None:

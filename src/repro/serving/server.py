@@ -175,6 +175,9 @@ class OracleServer:
             "warm": self._op_warm,
             "gc": self._op_gc,
         }
+        # Precomputed span labels: formatting f"serve.{op}" per request would
+        # allocate on the disabled-tracing fast path (obs-zero-overhead).
+        self._span_names = {op: f"serve.{op}" for op in self._handlers}
         if spec.platforms:
             self.warm(*spec.platforms)
 
@@ -198,6 +201,10 @@ class OracleServer:
                         f"{sorted(self._oracles)} (no hub attached)"
                     )
                 try:
+                    # repro-lint: disable=lock-blocking -- cold-start loads are
+                    # deliberately serialized: concurrent first queries for a
+                    # platform must collapse into one estimator load, not race
+                    # N duplicate ones; warm() exists to pay this up front
                     oracle = PerfOracle.load(self.hub, platform)
                 except FileNotFoundError as exc:
                     raise ServingError(str(exc)) from exc
@@ -227,7 +234,9 @@ class OracleServer:
         :meth:`PerfOracle.predict_networks` pass.  A failing group poisons
         only its own waiters (results may be Exception instances).
         """
-        dispatch = span("serve.coalesce", {"payloads": len(payloads)}, cat="serving")
+        dispatch = span("serve.coalesce", cat="serving")
+        if dispatch:
+            dispatch.set(payloads=len(payloads))
         with dispatch:
             return self._process_batch(payloads)
 
@@ -464,7 +473,7 @@ class OracleServer:
                 raise ServingError(
                     f"unknown op {op!r}; available: {sorted(self._handlers)}"
                 )
-            with span(f"serve.{op}", cat="serving"):
+            with span(self._span_names[op], cat="serving"):
                 result, items = handler(request)
         except Exception as exc:  # noqa: BLE001 - error becomes the response
             self.metrics.observe(

@@ -203,6 +203,11 @@ class OracleClient:
             with self._lock:
                 self._wfile.write(_encode(request))
                 self._wfile.flush()
+                # repro-lint: disable=lock-blocking -- the lock *is* the
+                # request pipeline: NDJSON responses carry no ids on the wire
+                # beyond echo, so one in-flight request per connection is the
+                # protocol; concurrent callers should use one client each (or
+                # the in-process path above, which coalesces)
                 line = self._rfile.readline()
             if not line:
                 raise ServingError("server closed the connection")
@@ -263,17 +268,20 @@ class OracleClient:
 
     # ------------------------------------------------------------ lifecycle
     def close(self) -> None:
-        if self._sock is not None:
-            for f in (self._rfile, self._wfile):
+        # Under the connection lock: a close racing an in-flight _call must
+        # not yank the socket out from under the write/readline pair.
+        with self._lock:
+            if self._sock is not None:
+                for f in (self._rfile, self._wfile):
+                    try:
+                        f.close()
+                    except OSError:
+                        pass
                 try:
-                    f.close()
+                    self._sock.close()
                 except OSError:
                     pass
-            try:
-                self._sock.close()
-            except OSError:
-                pass
-            self._sock = None
+                self._sock = None
 
     def __enter__(self) -> "OracleClient":
         return self

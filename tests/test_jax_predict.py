@@ -126,6 +126,7 @@ def test_no_eager_jax_import():
         "import repro.accelerators.jax_kernels\n"
         "import repro.accelerators.tpu_v5e, repro.accelerators.ultratrail\n"
         "import repro.accelerators.vta, repro.accelerators.xla_cpu\n"
+        "import repro.analysis\n"
         "assert 'jax' not in sys.modules, 'jax imported eagerly'\n"
     )
     subprocess.run([sys.executable, "-c", code], check=True)
