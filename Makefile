@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint bench-smoke bench bench-engine bench-runtime bench-forest bench-blocks bench-serve bench-predict bench-obs bench-analysis serve-smoke quickstart
+.PHONY: test lint bench-smoke bench bench-engine bench-runtime bench-forest bench-blocks bench-serve bench-predict bench-obs bench-analysis bench-chaos serve-smoke quickstart
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -35,6 +35,9 @@ bench-obs:
 
 bench-analysis:
 	$(PYTHON) -m benchmarks.bench_analysis
+
+bench-chaos:
+	$(PYTHON) -m benchmarks.bench_chaos
 
 serve-smoke:
 	$(PYTHON) -m benchmarks.serve_smoke

@@ -291,7 +291,13 @@ def _analyses(ctx: FileContext) -> list[_ClassAnalysis]:
     return cached
 
 
-LOCK_SCOPE = ("repro.serving", "repro.obs.metrics", "repro.obs.trace")
+LOCK_SCOPE = (
+    "repro.serving",
+    "repro.obs.metrics",
+    "repro.obs.trace",
+    "repro.runtime.faults",
+    "repro.runtime.health",
+)
 
 
 @register

@@ -229,9 +229,9 @@ class RngDiscipline(Rule):
     name = "rng-discipline"
     description = (
         "no module-global np.random state, no unseeded default_rng(), no "
-        "data-dependent conditional rng draws in core/ and api/"
+        "data-dependent conditional rng draws in core/, api/ and fault plans"
     )
-    scope = ("repro.core", "repro.api")
+    scope = ("repro.core", "repro.api", "repro.runtime.faults")
 
     def check(self, ctx: FileContext) -> Iterable[Finding]:
         aliases = self._draw_aliases(ctx.tree)

@@ -20,7 +20,14 @@ from repro.api.hub import EstimatorHub
 from repro.api.oracle import PerfOracle
 from repro.api.registry import get_platform, list_platforms, register_platform
 from repro.core.batch import BlockBatch, ConfigBatch
-from repro.runtime import MeasurementRuntime, RunStats, RuntimeSpec
+from repro.runtime import (
+    DegradationReport,
+    FaultPlan,
+    HealthPolicy,
+    MeasurementRuntime,
+    RunStats,
+    RuntimeSpec,
+)
 
 __all__ = [
     "BlockBatch",
@@ -28,7 +35,10 @@ __all__ = [
     "Campaign",
     "CampaignSpec",
     "ConfigBatch",
+    "DegradationReport",
     "EstimatorHub",
+    "FaultPlan",
+    "HealthPolicy",
     "MeasurementCache",
     "MeasurementRuntime",
     "PerfOracle",

@@ -142,6 +142,36 @@ def _metrics_reporter(server, interval_s: float):
     return stop
 
 
+def fsck_journal(args) -> int:
+    """Check (and with ``--repair`` compact) a measurement journal (``--fsck``).
+
+    Prints the :meth:`repro.runtime.MeasurementJournal.fsck` report as JSON;
+    the exit code is 0 when the journal is healthy, 1 when issues were found
+    (and left in place — rerun with ``--repair`` to compact them away).
+    """
+    import json
+
+    from repro.checkpoint.manager import journal_path
+    from repro.runtime import MeasurementJournal
+
+    where = args.journal_dir or args.hub_dir
+    if not where:
+        raise SystemExit("--fsck requires --journal-dir or --hub-dir")
+    journal = MeasurementJournal(journal_path(where))
+    try:
+        report = journal.fsck(repair=args.repair)
+    finally:
+        journal.close()
+    print(json.dumps(report, indent=2, sort_keys=True))
+    checked = report.get("after", report)
+    issues = (
+        checked["corrupt_lines"]
+        + checked["duplicate_keys"]
+        + (1 if checked["torn_tail"] else 0)
+    )
+    return 1 if issues else 0
+
+
 def serve_oracle(args) -> None:
     """Run the oracle estimation service until interrupted (``--serve-oracle``)."""
     import contextlib
@@ -158,6 +188,10 @@ def serve_oracle(args) -> None:
         window_s=args.window_ms / 1e3,
         cache_capacity=args.cache_capacity,
         predict_backend=args.predict_backend,
+        max_queue=args.max_queue if args.max_queue > 0 else None,
+        default_deadline_s=(
+            args.deadline_ms / 1e3 if args.deadline_ms > 0 else None
+        ),
     )
     server = OracleServer(spec=spec)
     sock = OracleSocketServer(
@@ -184,7 +218,9 @@ def serve_oracle(args) -> None:
     finally:
         if reporter is not None:
             reporter.set()
-        sock.close()
+        # Graceful drain: in-flight requests are answered (bounded by
+        # --drain-s) before the listening socket goes away.
+        sock.close(drain_s=args.drain_s)
 
 
 def main() -> None:
@@ -230,8 +266,25 @@ def main() -> None:
                          "directory; render with python -m repro.obs.report")
     ap.add_argument("--metrics-interval", type=float, default=0.0,
                     help="print a metrics digest every N seconds (0 = off)")
+    ap.add_argument("--max-queue", type=int, default=8192,
+                    help="admission-queue bound; overflowing requests get an "
+                         "explicit overload response (0 = unbounded)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="default per-request deadline in milliseconds; "
+                         "requests may override with their own deadline_ms "
+                         "(0 = no deadline)")
+    ap.add_argument("--drain-s", type=float, default=5.0,
+                    help="graceful-shutdown drain budget: seconds to wait for "
+                         "in-flight requests before closing the socket")
+    ap.add_argument("--fsck", action="store_true",
+                    help="check the measurement journal (torn tail, corrupt "
+                         "lines, duplicate keys) and exit; nonzero on issues")
+    ap.add_argument("--repair", action="store_true",
+                    help="with --fsck: compact the journal to drop corruption")
     args = ap.parse_args()
 
+    if args.fsck:
+        raise SystemExit(fsck_journal(args))
     if args.serve_oracle:
         serve_oracle(args)
         return

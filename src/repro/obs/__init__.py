@@ -15,6 +15,18 @@ the RNG stream, measurement order, or any numeric result — campaigns and
 served answers are bitwise identical with tracing on, off, and under
 concurrent metric snapshots.
 
+Well-known process-wide counters (all under the global :func:`metrics`
+registry; every one is best-effort and zero-cost when nothing increments it):
+
+* ``runtime.retries`` / ``runtime.failures`` — scheduler retry/abort counts
+* ``runtime.faults.{crash,hang,corrupt,slow,error}`` — failures the
+  scheduler classified and survived (chaos or organic)
+* ``runtime.quarantines`` — repeat-offender workers evicted from the pool
+* ``journal.corrupt_lines`` — journal lines dropped at replay
+* ``journal.torn_tails_sealed`` — torn write fragments sealed before append
+* ``serve.overload`` / ``serve.deadline_exceeded`` — requests answered with
+  explicit backpressure / deadline errors (never silent drops)
+
 Typical use::
 
     import repro.obs as obs

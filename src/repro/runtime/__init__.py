@@ -25,8 +25,26 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.runtime.faults import (
+    FaultEvent,
+    FaultPlan,
+    FaultyExecutor,
+    InjectedFault,
+    InjectedWorkerCrash,
+    TornWrite,
+)
+from repro.runtime.health import (
+    DegradationReport,
+    HealthPolicy,
+    HealthTracker,
+    WorkerHealth,
+)
 from repro.runtime.journal import JournalCorruptionWarning, MeasurementJournal
-from repro.runtime.scheduler import MeasurementError, MeasurementScheduler
+from repro.runtime.scheduler import (
+    MeasurementError,
+    MeasurementScheduler,
+    ResultIntegrityError,
+)
 from repro.runtime.stats import RunStats
 from repro.runtime.workers import SerialExecutor, WorkerPool
 
@@ -55,6 +73,12 @@ class RuntimeSpec:
     journal_path: str | None = None
     #: multiprocessing start method for the pool ("spawn" is device-safe)
     mp_context: str = "spawn"
+    #: worker-health / quarantine policy; None disables health tracking
+    health: HealthPolicy | None = HealthPolicy()
+    #: deterministic fault schedule (chaos testing); None = no injection.
+    #: The plan wraps the executor in a :class:`FaultyExecutor` and is
+    #: consulted by the journal's append path — production runs never set it
+    fault_plan: FaultPlan | None = None
 
 
 class MeasurementRuntime:
@@ -76,7 +100,9 @@ class MeasurementRuntime:
         self.platform = platform
         self.stats = RunStats()
         self.journal = (
-            MeasurementJournal(spec.journal_path) if spec.journal_path else None
+            MeasurementJournal(spec.journal_path, fault_plan=spec.fault_plan)
+            if spec.journal_path
+            else None
         )
         if spec.workers > 1:
             self.executor = WorkerPool(
@@ -84,6 +110,11 @@ class MeasurementRuntime:
             )
         else:
             self.executor = SerialExecutor(platform)
+        if spec.fault_plan is not None:
+            self.executor = FaultyExecutor(
+                self.executor, spec.fault_plan, report=self.stats.degradation
+            )
+        self.health = HealthTracker(spec.health) if spec.health is not None else None
         self.scheduler = MeasurementScheduler(
             self.executor,
             journal=self.journal,
@@ -93,6 +124,7 @@ class MeasurementRuntime:
             chunk_timeout_s=spec.chunk_timeout_s,
             target_chunk_s=spec.target_chunk_s,
             stats=self.stats,
+            health=self.health,
         )
 
     # ----------------------------------------------------------------- measure
@@ -131,13 +163,24 @@ class MeasurementRuntime:
 
 
 __all__ = [
+    "DegradationReport",
+    "FaultEvent",
+    "FaultPlan",
+    "FaultyExecutor",
+    "HealthPolicy",
+    "HealthTracker",
+    "InjectedFault",
+    "InjectedWorkerCrash",
     "JournalCorruptionWarning",
     "MeasurementError",
     "MeasurementJournal",
     "MeasurementRuntime",
     "MeasurementScheduler",
+    "ResultIntegrityError",
     "RunStats",
     "RuntimeSpec",
     "SerialExecutor",
+    "TornWrite",
+    "WorkerHealth",
     "WorkerPool",
 ]

@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.core.batch import BlockBatch, ConfigBatch
 from repro.obs.metrics import metrics as obs_metrics
+from repro.runtime.faults import JOURNAL_SITE, TornWrite
 
 RECORD_VERSION = 1
 _REQUIRED_KEYS = ("platform", "layer_type", "params", "rows", "seconds")
@@ -46,19 +47,129 @@ class JournalCorruptionWarning(UserWarning):
     """A journal line could not be parsed/validated and was skipped."""
 
 
-class MeasurementJournal:
-    """Append-only JSONL journal of ``(platform, layer_type, config) -> seconds``."""
+def _fsync_dir(path: str) -> None:
+    """fsync a directory so a rename inside it is itself durable (POSIX).
 
-    def __init__(self, path: str) -> None:
+    ``os.replace`` makes the swap atomic, but the *directory entry* only
+    becomes durable once the directory inode is flushed — without this a
+    power cut after compaction could resurrect the old (longer) journal.
+    Best-effort: platforms that cannot open directories just skip it.
+    """
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _validate_record(record) -> dict:
+    """Validate one parsed journal record; raises on any malformation."""
+    if not isinstance(record, dict):
+        raise ValueError("record is not an object")
+    if record.get("kind") == "blocks":
+        for key in _REQUIRED_BLOCK_KEYS:
+            if key not in record:
+                raise ValueError(f"missing key {key!r}")
+        # Rebuilding the batch validates the whole payload
+        # (shapes, index ranges); raises on malformed input.
+        batch = BlockBatch.from_payload(record["blocks"])
+        if len(batch) != len(record["seconds"]):
+            raise ValueError("blocks/seconds length mismatch")
+        np.asarray(record["seconds"], dtype=np.float64)
+    else:
+        for key in _REQUIRED_KEYS:
+            if key not in record:
+                raise ValueError(f"missing key {key!r}")
+        if len(record["rows"]) != len(record["seconds"]):
+            raise ValueError("rows/seconds length mismatch")
+        n_params = len(record["params"])
+        for row in record["rows"]:
+            if not isinstance(row, list) or len(row) != n_params:
+                raise ValueError("malformed config row")
+        # Values must parse too, or replay would abort mid-file
+        # on e.g. a bit-flipped cell; raises on non-numeric.
+        np.asarray(record["rows"], dtype=np.int64)
+        np.asarray(record["seconds"], dtype=np.float64)
+    return record
+
+
+def _record_keys(record) -> list[tuple]:
+    """Canonical per-measurement keys of a valid record (compaction's keys)."""
+    if record.get("kind") == "blocks":
+        batch = BlockBatch.from_payload(record["blocks"])
+        return [(record["platform"], fp) for fp in batch.fingerprints()]
+    params = tuple(record["params"])
+    return [
+        (record["platform"], record["layer_type"], tuple(sorted(zip(params, row))))
+        for row in record["rows"]
+    ]
+
+
+class MeasurementJournal:
+    """Append-only JSONL journal of ``(platform, layer_type, config) -> seconds``.
+
+    ``fault_plan`` (a :class:`~repro.runtime.faults.FaultPlan`) lets chaos
+    tests tear individual appends mid-record; production journals never pass
+    one and take the plain fsync'd append path.
+    """
+
+    def __init__(self, path: str, fault_plan=None) -> None:
         self.path = path
         self._fh = None
+        self._fault_plan = fault_plan
+        self._appends = 0
+        #: torn tails sealed before appending (see :meth:`_append_record`)
+        self.sealed_tails = 0
+        self._needs_seal = False
 
     # ------------------------------------------------------------------ write
     def _open(self):
         if self._fh is None:
             os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+            # A file that does not end in a newline carries the torn tail of
+            # a crashed append; flag it so the next append seals it first.
+            if os.path.exists(self.path) and os.path.getsize(self.path) > 0:
+                with open(self.path, "rb") as tail:
+                    tail.seek(-1, os.SEEK_END)
+                    self._needs_seal = tail.read(1) != b"\n"
             self._fh = open(self.path, "a", encoding="utf-8")
         return self._fh
+
+    def _append_record(self, record: dict) -> None:
+        """Durably append one record (write + flush + fsync).
+
+        If the file currently ends mid-record (a previous torn write), a
+        bare newline is sealed in first: replay then skips the torn
+        fragment as *one* corrupt line instead of the fragment swallowing
+        this record too.
+        """
+        fh = self._open()
+        if self._needs_seal:
+            fh.write("\n")
+            self._needs_seal = False
+            self.sealed_tails += 1
+            obs_metrics().inc("journal.torn_tails_sealed")
+        line = json.dumps(record, separators=(",", ":")) + "\n"
+        ordinal = self._appends
+        self._appends += 1
+        if self._fault_plan is not None:
+            event = self._fault_plan.take(JOURNAL_SITE, ordinal)
+            if event is not None:
+                # Tear the write exactly as a crash mid-write(2) would:
+                # half the bytes, no newline, durably on disk.
+                fh.write(line[: max(1, len(line) // 2)])
+                fh.flush()
+                os.fsync(fh.fileno())
+                self._needs_seal = True
+                raise TornWrite(f"injected torn journal write at append {ordinal}")
+        fh.write(line)
+        fh.flush()
+        os.fsync(fh.fileno())
 
     def append_chunk(
         self, platform: str, layer_type: str, batch: ConfigBatch, seconds: np.ndarray
@@ -66,18 +177,16 @@ class MeasurementJournal:
         """Durably record one measured chunk (write + flush + fsync)."""
         if len(batch) == 0:
             return
-        record = {
-            "v": RECORD_VERSION,
-            "platform": platform,
-            "layer_type": layer_type,
-            "params": list(batch.params),
-            "rows": batch.values.tolist(),
-            "seconds": np.asarray(seconds, dtype=np.float64).tolist(),
-        }
-        fh = self._open()
-        fh.write(json.dumps(record, separators=(",", ":")) + "\n")
-        fh.flush()
-        os.fsync(fh.fileno())
+        self._append_record(
+            {
+                "v": RECORD_VERSION,
+                "platform": platform,
+                "layer_type": layer_type,
+                "params": list(batch.params),
+                "rows": batch.values.tolist(),
+                "seconds": np.asarray(seconds, dtype=np.float64).tolist(),
+            }
+        )
 
     def append_block_chunk(
         self, platform: str, batch: BlockBatch, seconds: np.ndarray
@@ -91,17 +200,15 @@ class MeasurementJournal:
         """
         if len(batch) == 0:
             return
-        record = {
-            "v": RECORD_VERSION,
-            "kind": "blocks",
-            "platform": platform,
-            "blocks": batch.to_payload(),
-            "seconds": np.asarray(seconds, dtype=np.float64).tolist(),
-        }
-        fh = self._open()
-        fh.write(json.dumps(record, separators=(",", ":")) + "\n")
-        fh.flush()
-        os.fsync(fh.fileno())
+        self._append_record(
+            {
+                "v": RECORD_VERSION,
+                "kind": "blocks",
+                "platform": platform,
+                "blocks": batch.to_payload(),
+                "seconds": np.asarray(seconds, dtype=np.float64).tolist(),
+            }
+        )
 
     def close(self) -> None:
         if self._fh is not None:
@@ -125,33 +232,7 @@ class MeasurementJournal:
                 if not line:
                     continue
                 try:
-                    record = json.loads(line)
-                    if not isinstance(record, dict):
-                        raise ValueError("record is not an object")
-                    if record.get("kind") == "blocks":
-                        for key in _REQUIRED_BLOCK_KEYS:
-                            if key not in record:
-                                raise ValueError(f"missing key {key!r}")
-                        # Rebuilding the batch validates the whole payload
-                        # (shapes, index ranges); raises on malformed input.
-                        batch = BlockBatch.from_payload(record["blocks"])
-                        if len(batch) != len(record["seconds"]):
-                            raise ValueError("blocks/seconds length mismatch")
-                        np.asarray(record["seconds"], dtype=np.float64)
-                    else:
-                        for key in _REQUIRED_KEYS:
-                            if key not in record:
-                                raise ValueError(f"missing key {key!r}")
-                        if len(record["rows"]) != len(record["seconds"]):
-                            raise ValueError("rows/seconds length mismatch")
-                        n_params = len(record["params"])
-                        for row in record["rows"]:
-                            if not isinstance(row, list) or len(row) != n_params:
-                                raise ValueError("malformed config row")
-                        # Values must parse too, or replay would abort mid-file
-                        # on e.g. a bit-flipped cell; raises on non-numeric.
-                        np.asarray(record["rows"], dtype=np.int64)
-                        np.asarray(record["seconds"], dtype=np.float64)
+                    record = _validate_record(json.loads(line))
                 except (ValueError, TypeError, KeyError) as exc:
                     # Counted before warning: a warnings filter can silence
                     # the message, but a skipped line must stay visible in
@@ -164,6 +245,79 @@ class MeasurementJournal:
                     )
                     continue
                 yield record
+
+    # ------------------------------------------------------------------- fsck
+    def fsck(self, repair: bool = False) -> dict:
+        """Check journal integrity; with ``repair=True``, rewrite it clean.
+
+        Detects the three ways a journal degrades in practice:
+
+        * **torn tail** — the file does not end in a newline (a crash mid
+          append); the fragment costs one corrupt line on replay until the
+          next append seals it;
+        * **corrupt lines** — unparseable/ill-shaped records (bit rot,
+          manual edits), skipped by replay;
+        * **duplicate keys** — the same measurement recorded more than once
+          (retry-superseded chunks, restarted runs) — legal, since replay is
+          last-writer-wins, but bloat; ``kind_switches`` counts config/block
+          record interleavings, a proxy for how fragmented the file is.
+
+        Repair routes through the existing compaction path (validated
+        records only, last value under first-occurrence keys, atomic
+        replace), which by construction fixes all of the above without
+        changing what a replay yields.  Returns the report dict; when
+        repaired, ``"compaction"`` holds :meth:`compact`'s stats and the
+        post-repair state is re-checked into ``"after"``.
+        """
+        report = {
+            "path": self.path,
+            "exists": os.path.exists(self.path),
+            "records": 0,
+            "rows": 0,
+            "corrupt_lines": 0,
+            "torn_tail": False,
+            "duplicate_keys": 0,
+            "kind_switches": 0,
+            "repaired": False,
+        }
+        if not report["exists"]:
+            return report
+        self.close()  # a buffered append handle would race the scan
+        with open(self.path, "rb") as fh:
+            data = fh.read()
+        report["torn_tail"] = len(data) > 0 and not data.endswith(b"\n")
+        seen: set[tuple] = set()
+        last_kind = None
+        for raw in data.split(b"\n"):
+            raw = raw.strip()
+            if not raw:
+                continue
+            try:
+                record = _validate_record(json.loads(raw.decode("utf-8")))
+            except (ValueError, TypeError, KeyError, UnicodeDecodeError):
+                report["corrupt_lines"] += 1
+                continue
+            report["records"] += 1
+            kind = "blocks" if record.get("kind") == "blocks" else "configs"
+            if last_kind is not None and kind != last_kind:
+                report["kind_switches"] += 1
+            last_kind = kind
+            for key in _record_keys(record):
+                if key in seen:
+                    report["duplicate_keys"] += 1
+                else:
+                    seen.add(key)
+                    report["rows"] += 1
+        if repair:
+            report["compaction"] = self.compact()
+            report["repaired"] = True
+            after = self.fsck(repair=False)
+            report["after"] = {
+                k: after[k]
+                for k in ("records", "rows", "corrupt_lines", "torn_tail",
+                          "duplicate_keys", "kind_switches")
+            }
+        return report
 
     # ---------------------------------------------------------------- compact
     def compact(self) -> dict[str, int]:
@@ -272,6 +426,9 @@ class MeasurementJournal:
             fh.flush()
             os.fsync(fh.fileno())
         os.replace(tmp, self.path)
+        # The data hit disk before the rename; flush the rename itself too.
+        _fsync_dir(os.path.dirname(self.path) or ".")
+        self._needs_seal = False  # the rewrite never ends mid-record
         return {
             "records_in": records_in,
             "records_out": records_out,

@@ -3,12 +3,13 @@
 The scheduler is the deterministic heart of the runtime: a batch of ``n``
 configurations *or building blocks* is cut into contiguous chunks, every
 chunk is submitted to the executor up front (so a pool keeps all workers
-busy), and results are merged back **in chunk order** — i.e. in the batch's
-first-occurrence order.  Chunk boundaries never depend on worker count or
-completion order, so a campaign produces bitwise-identical results with 1, 2
-or 16 workers; and because the merge is order-preserving regardless of where
-the chunk boundaries fall, the chunk size itself cannot change results
-either — which is what makes adaptive sizing safe.
+busy), and results are merged back **positionally** — chunk ``i`` always
+owns rows ``[a, b)`` of the output, i.e. the batch's first-occurrence order.
+Chunk boundaries never depend on worker count or completion order, so a
+campaign produces bitwise-identical results with 1, 2 or 16 workers; and
+because the positional merge is order-preserving regardless of where the
+chunk boundaries fall, the chunk size itself cannot change results either —
+which is what makes adaptive sizing safe.
 
 Chunk sizing: an explicit ``chunk_size`` is honored as-is.  With
 ``chunk_size=None`` (the default via :class:`~repro.runtime.RuntimeSpec`),
@@ -18,14 +19,23 @@ amortize IPC for cheap analytical models, small enough to keep retries and
 journal granularity useful for multi-second hardware measurements.  Before
 any cost data exists it starts at :data:`DEFAULT_CHUNK_SIZE`.
 
-Fault handling per chunk:
+Fault handling per chunk — the dispatch loop is an event loop over chunk
+completions, so one chunk's failure never stalls the others:
 
-* an executor failure (worker crash, measurement exception) or a gather
-  timeout (``chunk_timeout_s``) triggers a resubmit with exponential backoff,
-  up to ``max_retries`` times;
-* a chunk that exhausts its budget raises :class:`MeasurementError` — the
-  journal still holds every chunk that completed before it, so a re-run
-  resumes instead of starting over.
+* an executor failure (worker crash, measurement exception), a corrupt
+  payload (integrity-envelope mismatch, :class:`ResultIntegrityError`) or a
+  per-attempt timeout (``chunk_timeout_s``) schedules a resubmission with
+  exponential backoff on a timer — only the failed chunk waits out its
+  backoff; every other in-flight chunk keeps completing and merging
+  meanwhile;
+* failures feed the optional :class:`~repro.runtime.health.HealthTracker`;
+  a repeat-offender worker gets quarantined (``executor.quarantine`` —
+  pool shrink-and-respawn) and every fault survived is recorded on
+  ``stats.degradation`` (:class:`~repro.runtime.health.DegradationReport`);
+* a chunk that exhausts its budget raises :class:`MeasurementError` naming
+  the chunk, its size and the attempts spent — the journal still holds
+  every chunk that completed before it, so a re-run resumes instead of
+  starting over.
 
 Completed chunks are appended to the :class:`~repro.runtime.journal
 .MeasurementJournal` (fsync'd) the moment they *complete* — out of merge
@@ -35,8 +45,11 @@ chunks still in flight, never completed work.
 
 from __future__ import annotations
 
+import queue
 import threading
 import time
+from concurrent.futures import CancelledError
+from concurrent.futures.process import BrokenProcessPool
 from typing import Callable
 
 import numpy as np
@@ -44,8 +57,11 @@ import numpy as np
 from repro.core.batch import BlockBatch, ConfigBatch
 from repro.obs.metrics import metrics as obs_metrics
 from repro.obs.trace import get_tracer, instant, span
+from repro.runtime.faults import InjectedWorkerCrash, TornWrite
+from repro.runtime.health import HealthTracker
 from repro.runtime.journal import MeasurementJournal
 from repro.runtime.stats import RunStats
+from repro.runtime.workers import chunk_checksum
 
 #: chunk size used before the run has any per-item cost data (PR-3's fixed
 #: default, kept so fresh runs behave exactly as they used to)
@@ -56,6 +72,49 @@ MAX_CHUNK_SIZE = 4096
 
 class MeasurementError(RuntimeError):
     """A chunk failed permanently (retry budget exhausted)."""
+
+
+class ResultIntegrityError(RuntimeError):
+    """A chunk payload failed its integrity envelope (checksum mismatch).
+
+    ``pid`` names the worker whose envelope did not verify (when the chunk
+    meta carried one), so the health tracker can attribute the failure.
+    """
+
+    def __init__(self, message: str, pid: int | None = None) -> None:
+        super().__init__(message)
+        self.pid = pid
+
+
+def _classify_failure(exc: BaseException) -> str:
+    """Map a chunk failure to its :class:`DegradationReport` kind."""
+    if isinstance(exc, ResultIntegrityError):
+        return "corrupt"
+    if isinstance(exc, TimeoutError):
+        return "hang"
+    if isinstance(exc, (InjectedWorkerCrash, BrokenProcessPool)):
+        return "crash"
+    return "error"
+
+
+class _ChunkState:
+    """Dispatch-loop bookkeeping for one chunk (guarded by the loop's lock)."""
+
+    __slots__ = ("index", "sub", "a", "b", "future", "attempts", "gen",
+                 "deadline", "fatal", "merged", "epoch")
+
+    def __init__(self, index: int, sub, a: int, b: int) -> None:
+        self.index = index
+        self.sub = sub
+        self.a = a
+        self.b = b
+        self.future = None
+        self.attempts = 0       # failed attempts so far
+        self.gen = 0            # bumped per (re)submission/failure: staleness token
+        self.deadline = None    # perf_counter deadline of the current attempt
+        self.fatal = None       # resubmission error => immediate MeasurementError
+        self.merged = False
+        self.epoch = 0          # pool epoch of the current attempt's submission
 
 
 class MeasurementScheduler:
@@ -71,6 +130,7 @@ class MeasurementScheduler:
         chunk_timeout_s: float | None = None,
         target_chunk_s: float = 1.0,
         stats: RunStats | None = None,
+        health: HealthTracker | None = None,
     ) -> None:
         self.executor = executor
         self.journal = journal
@@ -80,6 +140,17 @@ class MeasurementScheduler:
         self.chunk_timeout_s = chunk_timeout_s
         self.target_chunk_s = float(target_chunk_s)
         self.stats = stats if stats is not None else RunStats()
+        self.health = health
+        #: serializes respawn-on-broken-submit: retry timers resubmit
+        #: concurrently after a worker death, and exactly one of them may
+        #: rebuild the pool
+        self._respawn_serial = threading.Lock()
+        #: bumped on every pool respawn/quarantine; chunk failures whose
+        #: attempt was submitted under an older epoch are *collateral* of the
+        #: teardown, not evidence about a worker — retried, but never fed to
+        #: the health tracker (that feedback loop is what a quarantine cascade
+        #: is made of)
+        self._pool_epoch = 0
         #: per-path (configs vs blocks) [items, wall seconds] cost pools for
         #: adaptive sizing — a block costs orders of magnitude more than a
         #: single config, so one runtime serving both paths must not size
@@ -149,6 +220,29 @@ class MeasurementScheduler:
         ):
             return result[0], float(result[1]), None
         return result, None, None
+
+    def _validate_result(self, result, n: int) -> tuple:
+        """Split, shape-check and integrity-check one chunk result.
+
+        Raises ``ValueError`` on a malformed shape and
+        :class:`ResultIntegrityError` when the chunk meta carries an
+        integrity envelope (``crc``, see
+        :func:`repro.runtime.workers.chunk_checksum`) that does not verify
+        against the delivered payload.  Executors without an envelope are
+        accepted as before — the check is opt-in by construction.
+        """
+        y, exec_s, meta = self._split_result(result)
+        y = np.asarray(y, dtype=np.float64)
+        if y.shape != (n,):
+            raise ValueError(
+                f"executor returned shape {y.shape} for a {n}-row chunk"
+            )
+        if meta is not None and "crc" in meta and chunk_checksum(y) != meta["crc"]:
+            raise ResultIntegrityError(
+                "chunk payload failed its integrity envelope (crc mismatch)",
+                pid=meta.get("pid"),
+            )
+        return y, exec_s, meta
 
     # ----------------------------------------------------------------- dispatch
     def measure_batch(
@@ -223,16 +317,17 @@ class MeasurementScheduler:
         # complete the whole batch before the first journal append — one chunk
         # at a time keeps the journal's loses-at-most-one-chunk guarantee.
         prefetch = getattr(self.executor, "workers", 1) > 1
+        workers = max(1, int(getattr(self.executor, "workers", 1)))
+        health = self.health  # hoisted: consulted once per merged chunk
         t0 = time.perf_counter()
         measured_before = self.stats.measured
-        futures: list = [None] * len(bounds)
         out = np.empty(n, dtype=np.float64)
         # Durability is per *completed* chunk, not per merged chunk: with a
-        # pool, chunks finish out of order while the merge loop blocks on the
-        # oldest one, so successful futures journal themselves immediately via
-        # done-callbacks.  The merge loop stays authoritative: a timed-out
+        # pool, chunks finish out of order while the merge loop works on the
+        # oldest ones, so successful futures journal themselves immediately
+        # via done-callbacks.  The merge step stays authoritative: a timed-out
         # attempt may complete late and journal values the run then discards
-        # in favour of its retry, so the merge loop appends a *superseding*
+        # in favour of its retry, so the merge step appends a *superseding*
         # record whenever the journaled values differ from the values actually
         # merged (journal replay is last-writer-wins), and ``finalized``
         # blocks any straggler callback from journaling after that.
@@ -258,15 +353,176 @@ class MeasurementScheduler:
             def callback(fut) -> None:
                 if fut.cancelled() or fut.exception() is not None:
                     return
-                y, _, _ = MeasurementScheduler._split_result(fut.result())
-                y = np.asarray(y, dtype=np.float64)
-                if y.shape != (len(subs[index]),):
-                    return  # malformed result: the merge loop will retry it
+                try:
+                    y, _, _ = self._validate_result(fut.result(), len(subs[index]))
+                except Exception:
+                    return  # malformed/corrupt result: the retry machinery owns it
                 try:
                     journal_chunk(index, y, authoritative=False)
                 except Exception:
-                    pass  # append errors re-raise from the merge loop's call
+                    pass  # append errors re-raise from the merge step's call
             return callback
+
+        # ---- completion-event loop state --------------------------------
+        # Every (re)submission's done-callback enqueues ``(index, gen)``;
+        # ``gen`` is a staleness token so a timed-out attempt completing
+        # after its retry was scheduled cannot be mistaken for the retry.
+        # All _ChunkState mutation happens under ``state_lock`` — retry
+        # timers run on their own threads.
+        states = [_ChunkState(i, subs[i], a, b) for i, (a, b) in enumerate(bounds)]
+        events: queue.SimpleQueue = queue.SimpleQueue()
+        state_lock = threading.Lock()
+        timers: list[threading.Timer] = []
+        aborted = [False]
+
+        def launch(state: _ChunkState) -> None:
+            # First submission of a chunk (dispatch thread only).
+            future = self._submit(submit, state.sub, label)
+            if prefetch and journal_append is not None:
+                future.add_done_callback(completion_callback(state.index))
+            with state_lock:
+                state.future = future
+                state.gen += 1
+                state.epoch = self._pool_epoch
+                gen = state.gen
+                if self.chunk_timeout_s is not None:
+                    # Prefetched chunk i queues behind ~i/workers earlier
+                    # chunks on its worker; give later chunks proportional
+                    # slack so a saturated pool doesn't time them out while
+                    # they are merely waiting their turn.
+                    slack = 1 + (state.index // workers if prefetch else 0)
+                    state.deadline = time.perf_counter() + self.chunk_timeout_s * slack
+            future.add_done_callback(lambda _: events.put((state.index, gen)))
+
+        def schedule_retry(state: _ChunkState, attempt: int) -> None:
+            # Only this chunk sleeps out its backoff — on a timer thread,
+            # while the event loop keeps merging every other chunk.
+            delay = self.retry_backoff_s * (2 ** (attempt - 1))
+
+            def fire() -> None:
+                with state_lock:
+                    if aborted[0]:
+                        return
+                try:
+                    future = self._submit(submit, state.sub, label)
+                except Exception as submit_exc:
+                    with state_lock:
+                        state.fatal = submit_exc
+                        gen = state.gen
+                    events.put((state.index, gen))
+                    return
+                with state_lock:
+                    if aborted[0]:
+                        future.cancel()
+                        return
+                    state.future = future
+                    state.gen += 1
+                    state.epoch = self._pool_epoch
+                    gen = state.gen
+                    if self.chunk_timeout_s is not None:
+                        # A resubmission lands at the back of the pool's
+                        # queue, behind every still-in-flight chunk, so a
+                        # fixed timeout would burn the whole retry budget on
+                        # queue wait alone; scale the window by the number of
+                        # chunks ahead of it.
+                        state.deadline = time.perf_counter() + self.chunk_timeout_s * (
+                            1 + max(0, self.stats.in_flight)
+                        )
+                future.add_done_callback(lambda _: events.put((state.index, gen)))
+
+            timer = threading.Timer(delay, fire)
+            timer.daemon = True
+            timers.append(timer)
+            timer.start()
+
+        def fail(state: _ChunkState, exc: BaseException) -> None:
+            state.attempts += 1
+            attempt = state.attempts
+            if attempt > self.max_retries:
+                self.stats.failures += 1
+                obs_metrics().inc("runtime.failures")
+                raise MeasurementError(
+                    f"chunk {state.index} of {label!r} ({len(state.sub)} items) "
+                    f"failed after {attempt} attempt(s): {exc}"
+                ) from exc
+            self.stats.retries += 1
+            obs_metrics().inc("runtime.retries")
+            kind = _classify_failure(exc)
+            self.stats.degradation.record(
+                kind, chunk=state.index, attempt=attempt, error=type(exc).__name__
+            )
+            obs_metrics().inc(f"runtime.faults.{kind}")
+            if get_tracer() is not None:
+                instant(
+                    "runtime.retry",
+                    {"label": label, "chunk": state.index, "attempt": attempt,
+                     "error": type(exc).__name__},
+                    cat="runtime",
+                )
+            # A respawn/quarantine kills the old pool under every in-flight
+            # chunk: their BrokenProcessPool / cancellation failures are
+            # collateral of *our own* teardown, not evidence about a worker.
+            # Feeding them to the health tracker would let one quarantine
+            # trigger the next (each teardown fails the survivors, each
+            # failure advances the streak) until the retry budget starves.
+            collateral = state.epoch < self._pool_epoch and isinstance(
+                exc, (BrokenProcessPool, CancelledError)
+            )
+            if (
+                not collateral
+                and self.health is not None
+                and self.health.record_failure(getattr(exc, "pid", None))
+            ):
+                self._quarantine(getattr(exc, "pid", None))
+            with state_lock:
+                state.gen += 1  # events from the failed attempt are now stale
+                future = state.future
+                state.future = None
+                state.deadline = None
+            if future is not None:
+                future.cancel()
+            schedule_retry(state, attempt)
+
+        def merge(state: _ChunkState, y, exec_s, meta) -> None:
+            out[state.a : state.b] = y
+            with state_lock:
+                state.merged = True
+                state.future = None
+                state.deadline = None
+            self.stats.in_flight -= 1
+            self.stats.chunks += 1
+            self.stats.measured += state.b - state.a
+            chunk_counter.inc()
+            if exec_s is not None:
+                self.stats.exec_seconds += exec_s
+                exec_hist.observe(exec_s)
+                exec_pool = self._exec_costs.setdefault(path, [0, 0.0])
+                exec_pool[0] += state.b - state.a
+                exec_pool[1] += exec_s
+            tracer = get_tracer()
+            if tracer is not None and meta is not None and "pid" in meta:
+                # Replay the chunk's worker-side wall window onto a
+                # per-worker track (tid = worker pid) so pool chunks show
+                # up as parallel lanes in Perfetto.
+                tracer.worker_chunk(
+                    f"chunk[{label}]",
+                    meta["pid"],
+                    meta["t0"],
+                    meta["t1"],
+                    args={"index": state.index, "items": state.b - state.a},
+                )
+            if health is not None:
+                pid = meta.get("pid") if meta is not None else None
+                if health.record_success(pid, exec_s) == "slow":
+                    self.stats.degradation.record(
+                        "slow", chunk=state.index, pid=pid, exec_s=exec_s
+                    )
+                    obs_metrics().inc("runtime.faults.slow")
+            try:
+                journal_chunk(state.index, y, authoritative=True)
+            except TornWrite:
+                self.stats.degradation.record("torn_write", chunk=state.index)
+                raise
 
         reg = obs_metrics()
         chunk_counter = reg.counter("runtime.chunks")
@@ -277,43 +533,101 @@ class MeasurementScheduler:
         try:
             dispatch.__enter__()
             if prefetch:
-                self.stats.in_flight += len(bounds)
-                for index, sub in enumerate(subs):
-                    futures[index] = self._submit(submit, sub, label)
-                    if journal_append is not None:
-                        futures[index].add_done_callback(completion_callback(index))
-            for index, (a, b) in enumerate(bounds):
-                if not prefetch:
-                    self.stats.in_flight += 1
-                    futures[index] = self._submit(submit, subs[index], label)
-                y, exec_s, meta = self._gather(
-                    submit, label, subs[index], futures[index], index
-                )
-                out[a:b] = y
-                self.stats.in_flight -= 1
-                self.stats.chunks += 1
-                self.stats.measured += b - a
-                chunk_counter.inc()
-                if exec_s is not None:
-                    self.stats.exec_seconds += exec_s
-                    exec_hist.observe(exec_s)
-                    exec_pool = self._exec_costs.setdefault(path, [0, 0.0])
-                    exec_pool[0] += b - a
-                    exec_pool[1] += exec_s
-                tracer = get_tracer()
-                if tracer is not None and meta is not None and "pid" in meta:
-                    # Replay the chunk's worker-side wall window onto a
-                    # per-worker track (tid = worker pid) so pool chunks show
-                    # up as parallel lanes in Perfetto.
-                    tracer.worker_chunk(
-                        f"chunk[{label}]",
-                        meta["pid"],
-                        meta["t0"],
-                        meta["t1"],
-                        args={"index": index, "items": b - a},
-                    )
-                journal_chunk(index, y, authoritative=True)
+                self.stats.in_flight += len(states)
+                for state in states:
+                    launch(state)
+            else:
+                self.stats.in_flight += 1
+                launch(states[0])
+            next_serial = 1
+            unmerged = len(states)
+            while unmerged:
+                with state_lock:
+                    deadlines = [
+                        s.deadline
+                        for s in states
+                        if not s.merged and s.deadline is not None
+                    ]
+                timeout = None
+                if deadlines:
+                    timeout = max(0.0, min(deadlines) - time.perf_counter())
+                try:
+                    index, gen = events.get(timeout=timeout)
+                except queue.Empty:
+                    index = None
+                if index is not None:
+                    state = states[index]
+                    with state_lock:
+                        fatal = state.fatal
+                        stale = state.merged or gen != state.gen
+                        future = state.future
+                    if fatal is not None:
+                        self.stats.failures += 1
+                        obs_metrics().inc("runtime.failures")
+                        raise MeasurementError(
+                            f"chunk {state.index} of {label!r} could not be "
+                            f"resubmitted after a failed attempt: {fatal}"
+                        ) from fatal
+                    if not stale and future is not None and future.done():
+                        if future.cancelled():
+                            # fail() bumps ``gen`` before cancelling, so its
+                            # own cancellations always arrive stale; a *live*
+                            # cancellation can only come from pool teardown
+                            # (respawn/quarantine cancels queued futures) and
+                            # must retry like any other attempt failure —
+                            # dropping it would leave the chunk unmerged
+                            # forever and hang the dispatch loop.
+                            fail(
+                                state,
+                                CancelledError(
+                                    f"chunk {state.index} attempt cancelled "
+                                    "by pool teardown"
+                                ),
+                            )
+                        elif future.exception() is not None:
+                            fail(state, future.exception())
+                        else:
+                            try:
+                                y, exec_s, meta = self._validate_result(
+                                    future.result(), len(state.sub)
+                                )
+                            except Exception as bad:
+                                fail(state, bad)
+                            else:
+                                merge(state, y, exec_s, meta)
+                                unmerged -= 1
+                                if not prefetch and next_serial < len(states):
+                                    self.stats.in_flight += 1
+                                    launch(states[next_serial])
+                                    next_serial += 1
+                # Sweep expired deadlines even after processing an event: a
+                # hung chunk must not wait behind a busy completion queue.
+                if self.chunk_timeout_s is not None:
+                    now = time.perf_counter()
+                    expired = []
+                    with state_lock:
+                        for s in states:
+                            if (
+                                not s.merged
+                                and s.deadline is not None
+                                and s.future is not None
+                                and now >= s.deadline
+                                and not s.future.done()
+                            ):
+                                expired.append(s)
+                    for s in expired:
+                        fail(
+                            s,
+                            TimeoutError(
+                                f"chunk {s.index} attempt timed out after "
+                                f"{self.chunk_timeout_s}s"
+                            ),
+                        )
         finally:
+            with state_lock:
+                aborted[0] = True
+            for timer in timers:
+                timer.cancel()
             dispatch.__exit__(None, None, None)
             # On abort the remaining submissions are moot; don't leave the
             # progress surface claiming they are still in flight.
@@ -333,6 +647,9 @@ class MeasurementScheduler:
         once any worker has died abruptly (OOM-kill, segfault).  Executors that
         can recover expose ``respawn()``; one respawn-and-retry turns a single
         worker death into an ordinary chunk retry instead of a lost run.
+        Retry timers resubmit concurrently after a pool-wide death, so the
+        respawn itself is serialized and late arrivals just resubmit to the
+        already-rebuilt pool.
         """
         try:
             return submit(sub)
@@ -340,56 +657,23 @@ class MeasurementScheduler:
             respawn = getattr(self.executor, "respawn", None)
             if respawn is None:
                 raise
-            respawn()
-            return submit(sub)
-
-    def _gather(
-        self, submit: Callable, label: str, sub, future, index: int
-    ) -> tuple[np.ndarray, float | None, dict | None]:
-        attempt = 0
-        while True:
-            # A resubmission lands at the back of the pool's queue, behind
-            # every still-prefetched chunk, so a fixed timeout would burn the
-            # whole retry budget on queue wait alone.  Scale the gather window
-            # by the number of chunks ahead of it (first attempts already ran
-            # concurrently, so they keep the configured timeout).
-            timeout = self.chunk_timeout_s
-            if timeout is not None and attempt > 0:
-                timeout = timeout * (1 + max(0, self.stats.in_flight))
-            try:
-                y, exec_s, meta = self._split_result(future.result(timeout=timeout))
-                y = np.asarray(y, dtype=np.float64)
-                if y.shape != (len(sub),):
-                    raise ValueError(
-                        f"executor returned shape {y.shape} for a {len(sub)}-row chunk"
-                    )
-                return y, exec_s, meta
-            except Exception as exc:  # TimeoutError included; KeyboardInterrupt not
-                attempt += 1
-                if attempt > self.max_retries:
-                    self.stats.failures += 1
-                    obs_metrics().inc("runtime.failures")
-                    raise MeasurementError(
-                        f"chunk {index} of {label!r} ({len(sub)} items) "
-                        f"failed after {attempt} attempt(s): {exc}"
-                    ) from exc
-                self.stats.retries += 1
-                obs_metrics().inc("runtime.retries")
-                if get_tracer() is not None:
-                    instant(
-                        "runtime.retry",
-                        {"label": label, "chunk": index, "attempt": attempt,
-                         "error": type(exc).__name__},
-                        cat="runtime",
-                    )
-                future.cancel()
-                time.sleep(self.retry_backoff_s * (2 ** (attempt - 1)))
+            with self._respawn_serial:
                 try:
-                    future = self._submit(submit, sub, label)
-                except Exception as submit_exc:
-                    self.stats.failures += 1
-                    obs_metrics().inc("runtime.failures")
-                    raise MeasurementError(
-                        f"chunk {index} of {label!r} could not be resubmitted "
-                        f"after a failed attempt: {submit_exc}"
-                    ) from submit_exc
+                    return submit(sub)  # another thread already respawned
+                except Exception:
+                    respawn()
+                    self._pool_epoch += 1
+                    return submit(sub)
+
+    def _quarantine(self, pid: int | None) -> None:
+        """Quarantine a repeat offender if the executor supports it."""
+        quarantine = getattr(self.executor, "quarantine", None)
+        if quarantine is None:
+            return
+        self.stats.degradation.record("quarantine", pid=pid)
+        obs_metrics().inc("runtime.quarantines")
+        if get_tracer() is not None:
+            instant("runtime.quarantine", {"pid": pid}, cat="runtime")
+        with self._respawn_serial:
+            quarantine(pid)
+            self._pool_epoch += 1

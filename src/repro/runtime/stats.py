@@ -12,6 +12,8 @@ from __future__ import annotations
 import dataclasses
 import time
 
+from repro.runtime.health import DegradationReport
+
 
 @dataclasses.dataclass
 class RunStats:
@@ -36,6 +38,9 @@ class RunStats:
     #: executor-side seconds spent inside platform measurement calls (summed
     #: across workers; reported per chunk by the worker that executed it)
     exec_seconds: float = 0.0
+    #: every fault this run survived (crashes, hangs, corrupt payloads,
+    #: quarantines, ...) — see :class:`repro.runtime.health.DegradationReport`
+    degradation: DegradationReport = dataclasses.field(default_factory=DegradationReport)
     started_at: float = dataclasses.field(default_factory=time.perf_counter)
 
     def elapsed(self) -> float:
@@ -59,6 +64,7 @@ class RunStats:
             "exec_seconds": self.exec_seconds,
             "elapsed_s": self.elapsed(),
             "throughput_cfg_s": self.throughput(),
+            "degradation": self.degradation.snapshot(),
         }
 
     def render(self) -> str:
@@ -72,4 +78,7 @@ class RunStats:
             parts.append(f"{self.retries} retries")
         if self.failures:
             parts.append(f"{self.failures} failed")
+        survived = self.degradation.survived()
+        if survived:
+            parts.append(f"{survived} faults survived")
         return ", ".join(parts) + f" | {self.throughput():.0f} cfg/s"

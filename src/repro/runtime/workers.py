@@ -27,6 +27,7 @@ import importlib
 import multiprocessing
 import os
 import time
+import zlib
 from concurrent.futures import Future, ProcessPoolExecutor
 
 import numpy as np
@@ -55,16 +56,29 @@ def _init_worker(spec) -> None:
         _WORKER_PLATFORM = registry.get_platform(name, **dict(kwargs))
 
 
-def _chunk_meta(w0: float, w1: float) -> dict:
+def chunk_checksum(y: np.ndarray) -> int:
+    """Integrity envelope over a chunk's payload: crc32 of its float64 bytes.
+
+    Computed where the values are produced (the worker) and verified where
+    they are merged (the scheduler), so a payload corrupted in transit —
+    IPC, pickling, DMA, a fault plan's ``corrupt`` event — is caught by
+    checksum mismatch and retried instead of silently breaking bitwise
+    reproducibility.
+    """
+    return zlib.crc32(np.ascontiguousarray(y, dtype=np.float64).tobytes())
+
+
+def _chunk_meta(w0: float, w1: float, y: np.ndarray) -> dict:
     """Provenance for one measured chunk: which process, over which wall window.
 
     The parent-side tracer maps the wall-clock window onto its own timeline
     (``Tracer.wall_us``) and emits the chunk as a span on a per-worker track,
     so a Perfetto view of the trace shows pool workers running in parallel.
     Wall clock (``time.time``) is used — unlike ``perf_counter`` its epoch is
-    shared across processes.
+    shared across processes.  ``crc`` is the payload's integrity envelope
+    (:func:`chunk_checksum`), verified scheduler-side before the merge.
     """
-    return {"pid": os.getpid(), "t0": w0, "t1": w1}
+    return {"pid": os.getpid(), "t0": w0, "t1": w1, "crc": chunk_checksum(y)}
 
 
 def _measure_chunk(
@@ -83,7 +97,7 @@ def _measure_chunk(
     w0 = time.time()
     t0 = time.perf_counter()
     y = np.asarray(_WORKER_PLATFORM.measure_batch(layer_type, batch), dtype=np.float64)
-    return y, time.perf_counter() - t0, _chunk_meta(w0, time.time())
+    return y, time.perf_counter() - t0, _chunk_meta(w0, time.time(), y)
 
 
 def _measure_block_chunk(batch: BlockBatch) -> tuple[np.ndarray, float, dict]:
@@ -91,7 +105,7 @@ def _measure_block_chunk(batch: BlockBatch) -> tuple[np.ndarray, float, dict]:
     w0 = time.time()
     t0 = time.perf_counter()
     y = np.asarray(_WORKER_PLATFORM.measure_block_batch(batch), dtype=np.float64)
-    return y, time.perf_counter() - t0, _chunk_meta(w0, time.time())
+    return y, time.perf_counter() - t0, _chunk_meta(w0, time.time(), y)
 
 
 class SerialExecutor:
@@ -115,7 +129,7 @@ class SerialExecutor:
                 self.platform.measure_batch(layer_type, batch), dtype=np.float64
             )
             exec_s = time.perf_counter() - t0
-            future.set_result((y, exec_s, _chunk_meta(w0, time.time())))
+            future.set_result((y, exec_s, _chunk_meta(w0, time.time(), y)))
         except Exception as exc:
             future.set_exception(exc)
         return future
@@ -127,7 +141,7 @@ class SerialExecutor:
             t0 = time.perf_counter()
             y = np.asarray(self.platform.measure_block_batch(batch), dtype=np.float64)
             exec_s = time.perf_counter() - t0
-            future.set_result((y, exec_s, _chunk_meta(w0, time.time())))
+            future.set_result((y, exec_s, _chunk_meta(w0, time.time(), y)))
         except Exception as exc:
             future.set_exception(exc)
         return future
@@ -150,6 +164,8 @@ class WorkerPool:
         self.workers = int(workers)
         self.mp_context = mp_context
         self.respawns = 0
+        #: pids handed to :meth:`quarantine` (None for anonymous offenders)
+        self.quarantined: list[int | None] = []
         self._pool = self._make_pool()
 
     def _make_pool(self) -> ProcessPoolExecutor:
@@ -200,6 +216,22 @@ class WorkerPool:
         Futures pending on the old pool fail with ``BrokenProcessPool``; the
         scheduler's per-chunk retry resubmits them here.
         """
+        self._shutdown(self._pool, wait=False)
+        self.respawns += 1
+        self._pool = self._make_pool()
+
+    def quarantine(self, pid: int | None = None) -> None:
+        """Quarantine a repeat offender: shrink the pool by one slot, respawn.
+
+        ``ProcessPoolExecutor`` cannot evict a single worker, so quarantine
+        is pool-level: the replacement pool runs with one slot fewer (never
+        below one), which removes the offender *and* stops a sick host from
+        re-earning a full-width pool by respawning the same flaky worker.
+        Futures in flight on the old pool fail and retry like any respawn.
+        """
+        self.quarantined.append(pid)
+        if self.workers > 1:
+            self.workers -= 1
         self._shutdown(self._pool, wait=False)
         self.respawns += 1
         self._pool = self._make_pool()

@@ -22,7 +22,12 @@ Served answers are bitwise identical to direct ``PerfOracle`` calls —
 coalescing and caching change wall-clock, never results.
 """
 
-from repro.serving.batcher import AdmissionBatcher, ServingError
+from repro.serving.batcher import (
+    AdmissionBatcher,
+    DeadlineExceeded,
+    OverloadError,
+    ServingError,
+)
 from repro.serving.cache import ResultCache
 from repro.serving.metrics import MetricsRegistry
 from repro.serving.server import OracleServer, ServeSpec, block_payload, parse_block
@@ -30,10 +35,12 @@ from repro.serving.transport import OracleClient, OracleSocketServer
 
 __all__ = [
     "AdmissionBatcher",
+    "DeadlineExceeded",
     "MetricsRegistry",
     "OracleClient",
     "OracleServer",
     "OracleSocketServer",
+    "OverloadError",
     "ResultCache",
     "ServeSpec",
     "ServingError",

@@ -37,14 +37,29 @@ class ServingError(RuntimeError):
     """A request failed inside the serving layer (batcher closed, bad op...)."""
 
 
-class _Pending:
-    __slots__ = ("payload", "event", "result", "error")
+class OverloadError(ServingError):
+    """The admission queue is full: explicit backpressure, never a silent drop.
 
-    def __init__(self, payload: Any) -> None:
+    A bounded queue turns overload into an immediate, typed answer the caller
+    can retry against, instead of unbounded memory growth followed by
+    latencies nobody asked for.
+    """
+
+
+class DeadlineExceeded(ServingError):
+    """The request's deadline elapsed before its batch was answered."""
+
+
+class _Pending:
+    __slots__ = ("payload", "event", "result", "error", "deadline")
+
+    def __init__(self, payload: Any, deadline: float | None = None) -> None:
         self.payload = payload
         self.event = threading.Event()
         self.result: Any = None
         self.error: BaseException | None = None
+        #: absolute ``perf_counter`` deadline; None = wait forever
+        self.deadline = deadline
 
 
 class AdmissionBatcher:
@@ -57,11 +72,15 @@ class AdmissionBatcher:
         max_batch: int = 4096,
         on_batch: Callable[[int], None] | None = None,
         name: str = "oracle",
+        max_queue: int | None = None,
     ) -> None:
         self.process = process
         self.window_s = float(window_s)
         self.max_batch = int(max_batch)
         self.on_batch = on_batch
+        #: admission-queue bound; a submit beyond it raises ``OverloadError``
+        #: (None = unbounded, the pre-overload-control behaviour)
+        self.max_queue = None if max_queue is None else max(1, int(max_queue))
         self._cond = threading.Condition()
         self._queue: list[_Pending] = []
         self._closed = False
@@ -71,12 +90,24 @@ class AdmissionBatcher:
         self._thread.start()
 
     # ------------------------------------------------------------------ client
-    def submit(self, payload: Any) -> Any:
-        """Enqueue one request and block until its batch is answered."""
-        pending = _Pending(payload)
+    def submit(self, payload: Any, deadline_s: float | None = None) -> Any:
+        """Enqueue one request and block until its batch is answered.
+
+        ``deadline_s`` bounds the wait (seconds from now): a request still
+        queued when it elapses raises :class:`DeadlineExceeded` — it is
+        *answered*, not dropped; an overflowing queue raises
+        :class:`OverloadError` immediately.
+        """
+        deadline = None if deadline_s is None else time.perf_counter() + deadline_s
+        pending = _Pending(payload, deadline=deadline)
         with self._cond:
             if self._closed:
                 raise ServingError("batcher is closed")
+            if self.max_queue is not None and len(self._queue) >= self.max_queue:
+                raise OverloadError(
+                    f"admission queue is full ({self.max_queue} pending); "
+                    f"retry with backoff"
+                )
             self._queue.append(pending)
             # Wake the dispatcher only at the transitions it acts on: the
             # arrival that opens a window and the one that fills the batch.
@@ -85,16 +116,36 @@ class AdmissionBatcher:
             n = len(self._queue)
             if n == 1 or n >= self.max_batch:
                 self._cond.notify_all()
-        pending.event.wait()
+        if deadline is None:
+            pending.event.wait()
+        else:
+            remaining = deadline - time.perf_counter()
+            if not pending.event.wait(timeout=max(0.0, remaining)):
+                # The dispatcher may still answer this entry later; nobody
+                # will read it. The deadline is the caller's contract.
+                raise DeadlineExceeded(
+                    f"deadline of {deadline_s}s elapsed before the batch answered"
+                )
         if pending.error is not None:
             raise pending.error
         return pending.result
 
     # ------------------------------------------------------------- dispatcher
-    def _drain_locked(self) -> list[_Pending]:
-        batch = self._queue[: self.max_batch]
-        del self._queue[: len(batch)]
-        return batch
+    def _drain_locked(self) -> tuple[list[_Pending], list[_Pending]]:
+        """Split the queue head into (batch, expired-before-dispatch)."""
+        now = time.perf_counter()
+        batch: list[_Pending] = []
+        expired: list[_Pending] = []
+        keep: list[_Pending] = []
+        for pending in self._queue:
+            if pending.deadline is not None and pending.deadline <= now:
+                expired.append(pending)
+            elif len(batch) < self.max_batch:
+                batch.append(pending)
+            else:
+                keep.append(pending)
+        self._queue[:] = keep
+        return batch, expired
 
     def _loop(self) -> None:
         while True:
@@ -111,7 +162,14 @@ class AdmissionBatcher:
                     if remaining <= 0 or self._closed:
                         break
                     self._cond.wait(timeout=remaining)
-                batch = self._drain_locked()
+                batch, expired = self._drain_locked()
+            for pending in expired:
+                # Answered, never silently dropped: the waiter (likely gone
+                # already — its own wait timed out) gets the typed error.
+                pending.error = DeadlineExceeded(
+                    "deadline elapsed while queued for admission"
+                )
+                pending.event.set()
             self._dispatch(batch)
 
     def _dispatch(self, batch: list[_Pending]) -> None:

@@ -54,7 +54,12 @@ from repro.core.batch import ConfigBatch
 from repro.core.blocks import Block
 from repro.obs.metrics import metrics as obs_metrics
 from repro.obs.trace import get_tracer, span
-from repro.serving.batcher import AdmissionBatcher, ServingError
+from repro.serving.batcher import (
+    AdmissionBatcher,
+    DeadlineExceeded,
+    OverloadError,
+    ServingError,
+)
 from repro.serving.cache import ResultCache
 from repro.serving.metrics import MetricsRegistry
 
@@ -80,6 +85,13 @@ class ServeSpec:
     #: repro.core.jax_predict).  Applied via dataclasses.replace, so injected
     #: oracle objects are never mutated.
     predict_backend: str | None = None
+    #: admission-queue bound: requests beyond it are answered with an explicit
+    #: overload error (``"overloaded": true`` on the wire), never queued
+    #: without bound or silently dropped.  None = unbounded.
+    max_queue: int | None = 8192
+    #: deadline applied to requests that don't carry their own ``deadline_ms``;
+    #: None = wait forever (the pre-overload-control behaviour)
+    default_deadline_s: float | None = None
 
 
 def block_payload(block: Block) -> dict:
@@ -122,13 +134,21 @@ class _CoalescedPredictor:
     predict_networks requests coalesce into the same forest pass and share
     the result cache."""
 
-    def __init__(self, server: "OracleServer", platform: str) -> None:
+    def __init__(
+        self,
+        server: "OracleServer",
+        platform: str,
+        deadline_s: float | None = None,
+    ) -> None:
         self._server = server
         self._platform = platform
+        self._deadline_s = deadline_s
 
     def predict_networks(self, networks: Sequence[Sequence[Block]]) -> np.ndarray:
         values = self._server._network_values(
-            self._platform, [list(net) for net in networks]
+            self._platform,
+            [list(net) for net in networks],
+            deadline_s=self._deadline_s,
         )
         return np.asarray(values, dtype=np.float64)
 
@@ -163,7 +183,15 @@ class OracleServer:
             window_s=spec.window_s,
             max_batch=spec.max_batch,
             on_batch=self.metrics.observe_batch,
+            max_queue=spec.max_queue,
         )
+        # Graceful drain: `handle` registers in-flight requests under this
+        # condition; `drain()` flips `_draining` (new requests get an explicit
+        # "draining" response) and waits for the in-flight count to hit zero,
+        # so every admitted waiter is answered before the socket closes.
+        self._drain_cond = threading.Condition()
+        self._inflight = 0
+        self._draining = False
         self._started_at = time.perf_counter()
         self._handlers = {
             "ping": self._op_ping,
@@ -278,7 +306,11 @@ class OracleServer:
 
     # -------------------------------------------------------- value helpers
     def _predict_values(
-        self, platform: str, layer_type: str, configs: Sequence[Mapping]
+        self,
+        platform: str,
+        layer_type: str,
+        configs: Sequence[Mapping],
+        deadline_s: float | None = None,
     ) -> list[float]:
         oracle = self._oracle(platform)
         if layer_type not in oracle.layer_types():
@@ -303,7 +335,9 @@ class OracleServer:
                 sub = batch
             else:
                 sub = batch.take(np.asarray(miss, dtype=np.int64))
-            y = self.batcher.submit(("layers", platform, layer_type, sub))
+            y = self.batcher.submit(
+                ("layers", platform, layer_type, sub), deadline_s=deadline_s
+            )
             self.cache.put_many([keys[i] for i in miss], y)
             for i, yi in zip(miss, y):
                 cached[i] = float(yi)
@@ -336,7 +370,12 @@ class OracleServer:
             return ("jax",)
         return ()
 
-    def _network_values(self, platform: str, nets: list[list[Block]]) -> list[float]:
+    def _network_values(
+        self,
+        platform: str,
+        nets: list[list[Block]],
+        deadline_s: float | None = None,
+    ) -> list[float]:
         oracle = self._oracle(platform)
         if not nets:
             return []
@@ -347,13 +386,26 @@ class OracleServer:
         miss = [i for i, v in enumerate(cached) if v is None]
         if miss:
             sub = nets if len(miss) == len(cached) else [nets[i] for i in miss]
-            y = self.batcher.submit(("networks", platform, sub))
+            y = self.batcher.submit(("networks", platform, sub), deadline_s=deadline_s)
             self.cache.put_many([keys[i] for i in miss], y)
             for i, yi in zip(miss, y):
                 cached[i] = float(yi)
         return cached  # type: ignore[return-value]
 
     # ------------------------------------------------------------ endpoints
+    def _deadline_s(self, request: Mapping) -> float | None:
+        """Per-request deadline: ``deadline_ms`` on the wire, else the spec's."""
+        raw = request.get("deadline_ms")
+        if raw is None:
+            return self.spec.default_deadline_s
+        try:
+            deadline_ms = float(raw)
+        except (TypeError, ValueError) as exc:
+            raise ServingError(f"'deadline_ms' must be a number, got {raw!r}") from exc
+        if deadline_ms <= 0:
+            raise ServingError("'deadline_ms' must be positive")
+        return deadline_ms / 1000.0
+
     def _op_ping(self, request: Mapping) -> tuple[Any, int]:
         return {"pong": True}, 1
 
@@ -363,7 +415,9 @@ class OracleServer:
         configs = _require(request, "configs")
         if not isinstance(configs, Sequence) or isinstance(configs, (str, bytes)):
             raise ServingError("'configs' must be a list of config objects")
-        values = self._predict_values(platform, layer_type, configs)
+        values = self._predict_values(
+            platform, layer_type, configs, deadline_s=self._deadline_s(request)
+        )
         return values, len(values)
 
     def _op_predict_networks(self, request: Mapping) -> tuple[Any, int]:
@@ -372,7 +426,9 @@ class OracleServer:
         if not isinstance(networks, Sequence) or isinstance(networks, (str, bytes)):
             raise ServingError("'networks' must be a list of block lists")
         nets = [[parse_block(b) for b in net] for net in networks]
-        values = self._network_values(platform, nets)
+        values = self._network_values(
+            platform, nets, deadline_s=self._deadline_s(request)
+        )
         return values, len(values)
 
     def _op_autotune(self, request: Mapping) -> tuple[Any, int]:
@@ -405,7 +461,9 @@ class OracleServer:
                 )
                 for c in raw
             ]
-        predictor = _CoalescedPredictor(self, platform)
+        predictor = _CoalescedPredictor(
+            self, platform, deadline_s=self._deadline_s(request)
+        )
         ranked = autotune(
             predictor, cfg, shape, candidates=candidates,
             chips=int(request.get("chips", 256)),
@@ -458,10 +516,32 @@ class OracleServer:
 
         A malformed or failing request yields ``{"ok": False, "error": ...}``
         (and an error count in the metrics) — it must not take the server
-        down with it (asserted in tests/test_serving.py).
+        down with it (asserted in tests/test_serving.py).  Overload and
+        deadline failures additionally carry a machine-readable flag
+        (``"overloaded"`` / ``"deadline_exceeded"``) so clients can back off
+        or give up without parsing error strings; a draining server answers
+        with ``"draining"`` instead of accepting work it may not finish.
         """
         rid = request.get("id") if isinstance(request, Mapping) else None
         op = request.get("op") if isinstance(request, Mapping) else None
+        with self._drain_cond:
+            if self._draining:
+                return {
+                    "id": rid,
+                    "ok": False,
+                    "draining": True,
+                    "error": "ServingError: server is draining",
+                }
+            self._inflight += 1
+        try:
+            return self._handle_admitted(request, rid, op)
+        finally:
+            with self._drain_cond:
+                self._inflight -= 1
+                if self._inflight == 0:
+                    self._drain_cond.notify_all()
+
+    def _handle_admitted(self, request: Any, rid: Any, op: Any) -> dict:
         t0 = time.perf_counter()
         try:
             if not isinstance(request, Mapping):
@@ -480,12 +560,49 @@ class OracleServer:
                 str(op) if op else "invalid",
                 time.perf_counter() - t0, items=0, error=True,
             )
-            return {"id": rid, "ok": False, "error": f"{type(exc).__name__}: {exc}"}
+            response = {
+                "id": rid, "ok": False, "error": f"{type(exc).__name__}: {exc}",
+            }
+            if isinstance(exc, OverloadError):
+                response["overloaded"] = True
+                obs_metrics().inc("serve.overload")
+            elif isinstance(exc, DeadlineExceeded):
+                response["deadline_exceeded"] = True
+                obs_metrics().inc("serve.deadline_exceeded")
+            return response
         self.metrics.observe(str(op), time.perf_counter() - t0, items=items)
         return {"id": rid, "ok": True, "result": result}
 
     # ------------------------------------------------------------ lifecycle
-    def close(self) -> None:
+    def drain(self, timeout_s: float | None = None) -> bool:
+        """Stop admitting requests and wait for in-flight ones to be answered.
+
+        Returns True once the in-flight count reaches zero (False on
+        timeout).  Idempotent; new ``handle`` calls after drain starts get an
+        explicit ``"draining"`` response rather than silently vanishing.
+        """
+        deadline = None if timeout_s is None else time.perf_counter() + timeout_s
+        with self._drain_cond:
+            self._draining = True
+            while self._inflight > 0:
+                remaining = (
+                    None if deadline is None else deadline - time.perf_counter()
+                )
+                if remaining is not None and remaining <= 0:
+                    return False
+                # repro-lint: disable=lock-blocking -- condition-variable wait
+                # releases the lock; this *is* the drain barrier
+                self._drain_cond.wait(timeout=remaining)
+            return self._inflight == 0
+
+    def close(self, drain_s: float | None = 5.0) -> None:
+        """Drain in-flight requests (bounded by ``drain_s``), then stop.
+
+        Every waiter admitted before close is answered — the batcher is only
+        torn down after the drain barrier, so no request blocked inside
+        ``batcher.submit`` can be abandoned mid-wait.
+        """
+        self.drain(timeout_s=drain_s)
         self.batcher.close()
 
     def __enter__(self) -> "OracleServer":

@@ -29,9 +29,11 @@ from __future__ import annotations
 
 import json
 import os
+import random
 import socket
 import socketserver
 import threading
+import time
 from typing import Any, Mapping, Sequence
 
 from repro.serving.batcher import ServingError
@@ -63,6 +65,12 @@ class _RequestHandler(socketserver.StreamRequestHandler):
             except json.JSONDecodeError as exc:
                 response = {"id": None, "ok": False, "error": f"malformed JSON: {exc}"}
             else:
+                if getattr(self.server.oracle_server, "_draining", False):
+                    # Shutting down: close instead of answering, so the
+                    # client's reconnect-once finds the restarted server
+                    # (requests admitted before the drain are still answered
+                    # through the barrier in OracleServer.close).
+                    return
                 response = self.server.oracle_server.handle(request)
             try:
                 self.wfile.write(_encode(response))
@@ -130,8 +138,16 @@ class OracleSocketServer:
         """Serve on the calling thread (the ``--serve-oracle`` launcher)."""
         self._sock_server.serve_forever()
 
-    def close(self) -> None:
+    def close(self, drain_s: float | None = 5.0) -> None:
+        """Graceful shutdown: stop accepting, drain, then tear down.
+
+        Order matters: ``shutdown()`` stops the accept loop first, the oracle
+        server then drains (answering every in-flight waiter, bounded by
+        ``drain_s``), and only after that is the listening socket closed —
+        so a request admitted before close always gets its response line.
+        """
         self._sock_server.shutdown()
+        self.oracle_server.close(drain_s=drain_s)
         self._sock_server.server_close()
         if self._thread is not None:
             self._thread.join(timeout=10.0)
@@ -140,7 +156,6 @@ class OracleSocketServer:
                 os.unlink(self.unix_socket)
             except OSError:
                 pass
-        self.oracle_server.close()
 
     def __enter__(self) -> "OracleSocketServer":
         return self
@@ -161,7 +176,12 @@ class OracleClient:
 
     Socket clients hold one connection and serialize their own requests on a
     lock; use one client per thread for concurrency (the server coalesces
-    across connections).
+    across connections).  A dropped or reset connection (server restart,
+    idle-timeout close) is retried **once** after a jittered backoff by
+    transparently reconnecting and resending the request — safe because every
+    op is idempotent (predictions are pure, ``warm``/``gc`` converge).  A
+    request that *times out* is never resent: the server may still be working
+    on it, and resending would double the wait.
     """
 
     def __init__(
@@ -175,21 +195,71 @@ class OracleClient:
         if sum(given) != 1:
             raise ValueError("pass exactly one of server=, address=, path=")
         self._server = server
+        self._address = address
+        self._path = path
+        self._timeout = timeout
         self._lock = threading.Lock()
         self._next_id = 0
         self._sock = None
         self._rfile = self._wfile = None
-        if address is not None:
-            self._sock = socket.create_connection(address, timeout=timeout)
-        elif path is not None:
-            self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-            self._sock.settimeout(timeout)
-            self._sock.connect(path)
-        if self._sock is not None:
-            self._rfile = self._sock.makefile("rb")
-            self._wfile = self._sock.makefile("wb")
+        if server is None:
+            self._connect_locked()
 
     # ------------------------------------------------------------- plumbing
+    def _connect_locked(self) -> None:
+        """(Re)build the socket + file pair; caller holds the lock (or init)."""
+        if self._address is not None:
+            self._sock = socket.create_connection(
+                self._address, timeout=self._timeout
+            )
+        else:
+            self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            self._sock.settimeout(self._timeout)
+            self._sock.connect(self._path)
+        self._rfile = self._sock.makefile("rb")
+        self._wfile = self._sock.makefile("wb")
+
+    def _reconnect_locked(self, cause: BaseException) -> None:
+        """One reconnect attempt after a dropped connection (lock held).
+
+        Raises :class:`ServingError` (never a raw ``OSError``) when the
+        endpoint stays down.
+        """
+        for f in (self._rfile, self._wfile):
+            try:
+                if f is not None:
+                    f.close()
+            except OSError:
+                pass
+        try:
+            if self._sock is not None:
+                self._sock.close()
+        except OSError:
+            pass
+        self._sock = None
+        # Jittered so a fleet of clients dropped by one server restart does
+        # not stampede back in lockstep.
+        # repro-lint: disable=lock-blocking -- the backoff must serialize with
+        # the request pipeline: releasing the lock here would let another
+        # caller interleave a request onto a half-rebuilt connection
+        time.sleep(0.05 * (1.0 + random.random()))
+        try:
+            self._connect_locked()
+        except OSError as exc:
+            raise ServingError(
+                f"connection lost ({cause}) and reconnect failed: {exc}"
+            ) from exc
+
+    def _roundtrip_locked(self, data: bytes) -> bytes:
+        self._wfile.write(data)
+        self._wfile.flush()
+        # repro-lint: disable=lock-blocking -- the lock *is* the
+        # request pipeline: NDJSON responses carry no ids on the wire
+        # beyond echo, so one in-flight request per connection is the
+        # protocol; concurrent callers should use one client each (or
+        # the in-process path above, which coalesces)
+        return self._rfile.readline()
+
     def _call(self, request: dict) -> Any:
         with self._lock:
             self._next_id += 1
@@ -200,17 +270,28 @@ class OracleClient:
             # straight into handle() so the admission batcher can coalesce them.
             response = self._server.handle(request)
         else:
+            data = _encode(request)
             with self._lock:
-                self._wfile.write(_encode(request))
-                self._wfile.flush()
-                # repro-lint: disable=lock-blocking -- the lock *is* the
-                # request pipeline: NDJSON responses carry no ids on the wire
-                # beyond echo, so one in-flight request per connection is the
-                # protocol; concurrent callers should use one client each (or
-                # the in-process path above, which coalesces)
-                line = self._rfile.readline()
-            if not line:
-                raise ServingError("server closed the connection")
+                if self._sock is None:
+                    raise ServingError("client is closed")
+                try:
+                    line = self._roundtrip_locked(data)
+                    if not line:
+                        # EOF mid-protocol == the connection dropped; eligible
+                        # for the same single reconnect as a reset.
+                        raise ConnectionResetError("server closed the connection")
+                except TimeoutError as exc:
+                    raise ServingError(f"request timed out: {exc}") from exc
+                except (ConnectionError, OSError) as exc:
+                    self._reconnect_locked(exc)
+                    try:
+                        line = self._roundtrip_locked(data)
+                    except OSError as retry_exc:
+                        raise ServingError(
+                            f"request failed after reconnect: {retry_exc}"
+                        ) from retry_exc
+                    if not line:
+                        raise ServingError("server closed the connection") from exc
             response = json.loads(line)
         if not isinstance(response, Mapping) or "ok" not in response:
             raise ServingError(f"malformed response: {response!r}")

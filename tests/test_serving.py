@@ -19,6 +19,7 @@ from __future__ import annotations
 import json
 import socket
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -28,10 +29,12 @@ from repro.api import Campaign, CampaignSpec, EstimatorHub, PerfOracle
 from repro.core.blocks import Block
 from repro.serving import (
     AdmissionBatcher,
+    DeadlineExceeded,
     MetricsRegistry,
     OracleClient,
     OracleServer,
     OracleSocketServer,
+    OverloadError,
     ResultCache,
     ServeSpec,
     ServingError,
@@ -202,6 +205,293 @@ class TestAdmissionBatcher:
         batcher.close()
         with pytest.raises(ServingError):
             batcher.submit(1)
+
+
+# ----------------------------------------------------------- overload control
+class TestOverloadControl:
+    def test_queue_overflow_is_an_explicit_answer_never_a_silent_drop(self):
+        """Every submit is accounted for: answered with a result or answered
+        with OverloadError — admitted + overloaded == issued."""
+        entered = threading.Event()
+        release = threading.Event()
+
+        def process(payloads):
+            entered.set()
+            release.wait(timeout=10.0)
+            return [p * 2 for p in payloads]
+
+        batcher = AdmissionBatcher(process, window_s=0.001, max_queue=2)
+        try:
+            results: dict[int, int] = {}
+            overloads: list[int] = []
+
+            def plug():
+                results[0] = batcher.submit(0)
+
+            plug_thread = threading.Thread(target=plug)
+            plug_thread.start()
+            assert entered.wait(timeout=10.0)  # dispatcher is busy in process
+
+            def worker(i):
+                try:
+                    results[i] = batcher.submit(i)
+                except OverloadError:
+                    overloads.append(i)
+
+            threads = [threading.Thread(target=worker, args=(i,)) for i in (1, 2, 3, 4)]
+            for t in threads:
+                t.start()
+            # the queued (non-overloaded) submits are parked in the queue
+            deadline = time.perf_counter() + 10.0
+            while len(overloads) < 2 and time.perf_counter() < deadline:
+                time.sleep(0.005)
+            release.set()
+            plug_thread.join(timeout=10.0)
+            for t in threads:
+                t.join(timeout=10.0)
+            assert len(results) + len(overloads) == 5  # nothing vanished
+            assert len(overloads) == 2  # queue bound of 2 admitted exactly 2
+            assert all(results[i] == i * 2 for i in results)
+        finally:
+            release.set()
+            batcher.close()
+
+    def test_server_marks_overload_responses(self, oracle):
+        with _server(oracle) as server:
+            def submit_overloaded(payload, deadline_s=None):
+                raise OverloadError("queue full")
+
+            server.batcher.submit = submit_overloaded
+            response = server.handle(
+                {"id": 1, "op": "predict", "platform": PLATFORM,
+                 "layer_type": "toy", "configs": _configs(64)}
+            )
+        assert response["ok"] is False
+        assert response["overloaded"] is True
+        assert "OverloadError" in response["error"]
+
+    def test_client_sees_overload_as_serving_error(self, oracle):
+        with _server(oracle, max_queue=1) as server:
+            entered = threading.Event()
+            release = threading.Event()
+            real_process = server.batcher.process
+
+            def slow_process(payloads):
+                entered.set()
+                release.wait(timeout=10.0)
+                return real_process(payloads)
+
+            server.batcher.process = slow_process
+            client = OracleClient(server=server)
+            try:
+                ok: list[list] = []
+                errors: list[Exception] = []
+
+                def worker(offset):
+                    try:
+                        ok.append(client.predict(PLATFORM, "toy", _configs(4, offset)))
+                    except ServingError as exc:
+                        errors.append(exc)
+
+                threads = [
+                    threading.Thread(target=worker, args=(o,)) for o in range(6)
+                ]
+                for t in threads:
+                    t.start()
+                entered.wait(timeout=10.0)
+                deadline = time.perf_counter() + 10.0
+                while len(ok) + len(errors) < 5 and time.perf_counter() < deadline:
+                    time.sleep(0.005)
+            finally:
+                release.set()
+            for t in threads:
+                t.join(timeout=10.0)
+            assert len(ok) + len(errors) == 6
+            assert any("OverloadError" in str(e) for e in errors)
+
+
+# ------------------------------------------------------------------ deadlines
+class TestDeadlines:
+    def test_submit_deadline_raises_typed_error(self):
+        release = threading.Event()
+
+        def process(payloads):
+            release.wait(timeout=10.0)
+            return list(payloads)
+
+        batcher = AdmissionBatcher(process, window_s=0.001)
+        try:
+            t0 = time.perf_counter()
+            with pytest.raises(DeadlineExceeded):
+                batcher.submit("x", deadline_s=0.05)
+            assert time.perf_counter() - t0 < 5.0  # did not wait forever
+        finally:
+            release.set()
+            batcher.close()
+
+    def test_expired_queue_entries_are_answered_not_dropped(self):
+        """An entry whose deadline lapses while queued is answered with
+        DeadlineExceeded at drain time — it never consumes a batch slot and
+        never silently vanishes."""
+        entered = threading.Event()
+        release = threading.Event()
+        processed: list = []
+
+        def process(payloads):
+            if not entered.is_set():
+                entered.set()
+                release.wait(timeout=10.0)
+            processed.extend(payloads)
+            return list(payloads)
+
+        batcher = AdmissionBatcher(process, window_s=0.001)
+        try:
+            plug = threading.Thread(target=batcher.submit, args=("plug",))
+            plug.start()
+            assert entered.wait(timeout=10.0)
+            with pytest.raises(DeadlineExceeded):
+                batcher.submit("doomed", deadline_s=0.05)  # expires while queued
+            release.set()
+            plug.join(timeout=10.0)
+            assert batcher.submit("after") == "after"
+            assert "doomed" not in processed  # expired entry skipped dispatch
+        finally:
+            release.set()
+            batcher.close()
+
+    def test_server_marks_deadline_responses_and_validates_field(self, oracle):
+        with _server(oracle) as server:
+            def submit_expired(payload, deadline_s=None):
+                raise DeadlineExceeded("too slow")
+
+            server.batcher.submit = submit_expired
+            response = server.handle(
+                {"id": 2, "op": "predict", "platform": PLATFORM,
+                 "layer_type": "toy", "configs": _configs(8), "deadline_ms": 50}
+            )
+            assert response["ok"] is False
+            assert response["deadline_exceeded"] is True
+            bad = server.handle(
+                {"id": 3, "op": "predict", "platform": PLATFORM,
+                 "layer_type": "toy", "configs": _configs(2), "deadline_ms": -1}
+            )
+            assert bad["ok"] is False and "deadline_ms" in bad["error"]
+
+    def test_generous_deadline_answers_normally_and_bitwise(self, oracle):
+        cfgs = _configs(9)
+        direct = [float(v) for v in oracle.predict("toy", cfgs)]
+        with _server(oracle, default_deadline_s=30.0) as server:
+            response = server.handle(
+                {"id": 4, "op": "predict", "platform": PLATFORM,
+                 "layer_type": "toy", "configs": cfgs, "deadline_ms": 30000}
+            )
+        assert response["ok"] is True
+        assert response["result"] == direct
+
+
+# -------------------------------------------------------------- graceful drain
+class TestGracefulDrain:
+    def test_drain_answers_inflight_then_rejects_new_requests(self, oracle):
+        entered = threading.Event()
+        release = threading.Event()
+        real_process = None
+        with _server(oracle) as server:
+            real_process = server.batcher.process
+
+            def slow_process(payloads):
+                entered.set()
+                release.wait(timeout=10.0)
+                return real_process(payloads)
+
+            server.batcher.process = slow_process
+            answers: list[dict] = []
+
+            def inflight():
+                answers.append(server.handle(
+                    {"id": 5, "op": "predict", "platform": PLATFORM,
+                     "layer_type": "toy", "configs": _configs(3)}
+                ))
+
+            t = threading.Thread(target=inflight)
+            t.start()
+            assert entered.wait(timeout=10.0)
+            # drain times out while the request is stuck in the batcher...
+            assert server.drain(timeout_s=0.05) is False
+            # ...new work is already rejected with an explicit flag...
+            rejected = server.handle({"id": 6, "op": "ping"})
+            assert rejected["ok"] is False and rejected["draining"] is True
+            # ...and once released, the in-flight waiter is answered.
+            release.set()
+            t.join(timeout=10.0)
+            assert server.drain(timeout_s=10.0) is True
+            assert answers and answers[0]["ok"] is True
+
+    def test_socket_close_answers_inflight_before_closing(self, oracle):
+        cfgs = _configs(4)
+        direct = [float(v) for v in oracle.predict("toy", cfgs)]
+        server = _server(oracle)
+        entered = threading.Event()
+        release = threading.Event()
+        real_process = server.batcher.process
+
+        def slow_process(payloads):
+            entered.set()
+            release.wait(timeout=10.0)
+            return real_process(payloads)
+
+        server.batcher.process = slow_process
+        sock = OracleSocketServer(server, port=0).start()
+        client = OracleClient(address=sock.address)
+        results: list = []
+        t = threading.Thread(
+            target=lambda: results.append(client.predict(PLATFORM, "toy", cfgs))
+        )
+        t.start()
+        assert entered.wait(timeout=10.0)
+        release_timer = threading.Timer(0.2, release.set)
+        release_timer.start()
+        sock.close(drain_s=10.0)  # must wait for the in-flight answer
+        t.join(timeout=10.0)
+        client.close()
+        assert results == [direct]
+
+
+# ----------------------------------------------------------- client reconnect
+class TestClientReconnect:
+    def test_client_survives_a_server_restart(self, oracle):
+        cfgs = _configs(6)
+        direct = [float(v) for v in oracle.predict("toy", cfgs)]
+        first = OracleSocketServer(_server(oracle), port=0).start()
+        host, port = first.address
+        client = OracleClient(address=(host, port))
+        assert client.predict(PLATFORM, "toy", cfgs) == direct
+        first.close(drain_s=0.0)
+        # restart on the same port (allow_reuse_address) with fresh state
+        second = OracleSocketServer(_server(oracle), host=host, port=port).start()
+        try:
+            # the old connection is dead; the client reconnects once and resends
+            assert client.predict(PLATFORM, "toy", cfgs) == direct
+            assert client.ping() is True
+        finally:
+            client.close()
+            second.close(drain_s=0.0)
+
+    def test_permanent_server_death_is_a_serving_error(self, oracle):
+        sock = OracleSocketServer(_server(oracle), port=0).start()
+        client = OracleClient(address=sock.address)
+        assert client.ping() is True
+        sock.close(drain_s=0.0)
+        with pytest.raises(ServingError):  # never a raw OSError
+            client.ping()
+        client.close()
+
+    def test_closed_client_raises_cleanly(self, oracle):
+        with _server(oracle) as server:
+            with OracleSocketServer(server, port=0).start() as sock:
+                client = OracleClient(address=sock.address)
+                client.close()
+                with pytest.raises(ServingError, match="closed"):
+                    client.ping()
 
 
 # --------------------------------------------------------------------- cache
